@@ -1,0 +1,94 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(pattern="experiments/dryrun/*.json"):
+    cells = {}
+    for f in sorted(glob.glob(pattern)):
+        d = json.load(open(f))
+        name = os.path.basename(f)[:-5]
+        parts = name.split("__")
+        tag = parts[3] if len(parts) > 3 else "baseline"
+        cells[(d["arch"], d["shape"], parts[2], tag)] = d
+    return cells
+
+
+def fmt(v, nd=3):
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-3 or abs(v) >= 1e4:
+            return f"{v:.2e}"
+        return f"{v:.{nd}g}"
+    return str(v)
+
+
+def roofline_table(cells, pod="pod1", tag="baseline"):
+    lines = [
+        "| arch | shape | kind | compute s | memory s | collective s | bottleneck | MODEL_FLOPs | useful | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, p, t), d in sorted(cells.items()):
+        if p != pod or t != tag:
+            continue
+        if d.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | — | skipped: sub-quadratic-only shape | — | — | — |")
+            continue
+        if d.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | — | ERROR | | | | | | |")
+            continue
+        lines.append(
+            "| {a} | {s} | {k} | {c} | {m} | {co} | **{b}** | {mf} | {u} | {f} |".format(
+                a=arch, s=shape, k=d.get("kind", ""),
+                c=fmt(d["compute_s"]), m=fmt(d["memory_s"]), co=fmt(d["collective_s"]),
+                b=d["bottleneck"], mf=fmt(d["model_flops"]),
+                u=fmt(d["useful_ratio"]), f="yes" if d.get("fits_hbm_16g") else "NO",
+            )
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(cells, pod="pod2"):
+    lines = [
+        "| arch | shape | status | args GB/dev | temps GB/dev | compile s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, p, t), d in sorted(cells.items()):
+        if p != pod or t != "baseline":
+            continue
+        if d.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | skipped (justified) | — | — | — |")
+            continue
+        ms = d.get("memory_stats_production", d.get("memory_stats", {}))
+        lines.append(
+            "| {a} | {s} | {st} | {arg} | {tmp} | {c} |".format(
+                a=arch, s=shape, st=d["status"],
+                arg=fmt(ms.get("argument_bytes", 0) / 1e9),
+                tmp=fmt(ms.get("temp_bytes", 0) / 1e9),
+                c=fmt(d.get("compile_a_s")),
+            )
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    cells = load()
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        print(roofline_table(cells))
+    elif which == "dryrun2":
+        print(dryrun_table(cells, "pod2"))
+    else:
+        for key in sorted(cells):
+            if key[3] != "baseline":
+                d = cells[key]
+                print(key, d.get("status"), "comp", fmt(d.get("compute_s")),
+                      "mem", fmt(d.get("memory_s")), "coll", fmt(d.get("collective_s")),
+                      "useful", fmt(d.get("useful_ratio")), "fits", d.get("fits_hbm_16g"))

@@ -1,0 +1,117 @@
+"""Benchmark harness — one entry per paper table/figure + kernel microbench.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV. Paper-table benches report their
+headline derived quantity (a speedup or a ratio); kernel benches report
+measured interpret-mode microseconds per call (CPU — TPU numbers come from
+the roofline, EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_kernels(rows, quick=True):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    m = 256 if quick else 1024
+    a = jnp.asarray(rng.standard_normal((m, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128, m)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+    us, _ = _t(ops.panel_update, c, a, b)
+    rows.append(("kernel.panel_update", us, f"gflops={2*m*m*128/us/1e3:.1f}"))
+
+    u = np.triu(rng.standard_normal((128, 128)).astype(np.float32))
+    np.fill_diagonal(u, np.abs(u).sum(1) + 1)
+    us, _ = _t(ops.trsm_right_upper, a, jnp.asarray(u))
+    rows.append(("kernel.trsm_right_upper", us, f"panel={m}x128"))
+
+    n, w = (2048, 16) if quick else (16384, 32)
+    cols = np.sort(rng.integers(0, n, (n, w)).astype(np.int32), axis=1)
+    vals = rng.standard_normal((n, w)).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    us, _ = _t(ops.spmv_ell, jnp.asarray(cols), jnp.asarray(vals), x)
+    rows.append(("kernel.spmv_ell", us, f"nnz={n*w}"))
+
+
+def bench_paper_tables(rows, quick=True):
+    from benchmarks import bench_ilu as B
+
+    t0 = time.perf_counter()
+    hdr, data, static_wins = B.table1_load_balancing(quick)
+    rows.append(("paper.table1_static_vs_dynamic", (time.perf_counter() - t0) * 1e6,
+                 f"static_wins={static_wins}"))
+
+    t0 = time.perf_counter()
+    hdr, data = B.fig6_symbolic_vs_numeric(quick)
+    rows.append(("paper.fig6_sym_vs_num", (time.perf_counter() - t0) * 1e6,
+                 f"ratios={data[0][1]}"))
+
+    t0 = time.perf_counter()
+    hdr, data = B.tables23_pilu1(quick)
+    best = max(r[5] for r in data)
+    rows.append(("paper.tables23_pilu1_speedup", (time.perf_counter() - t0) * 1e6,
+                 f"best_speedup={best}"))
+
+    t0 = time.perf_counter()
+    hdr, data, ib_better, ib_peak = B.fig8_infiniband(quick)
+    rows.append(("paper.fig8_infiniband", (time.perf_counter() - t0) * 1e6,
+                 f"ib_extends_scaling={ib_better and ib_peak}"))
+
+    t0 = time.perf_counter()
+    hdr, data, monotone = B.fig9_grid_latency(quick)
+    rows.append(("paper.fig9_grid_latency", (time.perf_counter() - t0) * 1e6,
+                 f"graceful_degradation={monotone} {data}"))
+
+    t0 = time.perf_counter()
+    hdr, data, seq_ratio, par_ratio = B.fig5_e40r3000(quick)
+    rows.append(("paper.fig5_e40r3000", (time.perf_counter() - t0) * 1e6,
+                 f"seq_k6/k3={seq_ratio:.1f} par_k6/k3={par_ratio:.1f}"))
+
+
+def bench_bitcompat(rows, quick=True):
+    """Not a paper table but THE paper property: parallel == sequential."""
+    from repro.core import matgen, numeric_ilu_ref, pilu1_symbolic
+    from repro.core.api import ilu
+
+    n = 256 if quick else 1024
+    a = matgen(n, density=0.03, seed=9)
+    pat = pilu1_symbolic(a)
+    want = numeric_ilu_ref(a, pat)
+    t0 = time.perf_counter()
+    got = ilu(a, 1, backend="jax", band_rows=16).vals
+    us = (time.perf_counter() - t0) * 1e6
+    eq = bool(np.array_equal(got.view(np.int32), want.view(np.int32)))
+    rows.append(("paper.bitcompat_banded", us, f"bitwise_equal={eq}"))
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    rows = []
+    bench_bitcompat(rows, quick)
+    bench_kernels(rows, quick)
+    bench_paper_tables(rows, quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""TOP-ILU on a simulated 8-device ring: the paper's Fig-4 pipeline.
+
+Shows static round-robin band ownership, the psum vs explicit-ring
+broadcast variants, and verifies bit-compatibility of both.
+
+    python examples/ilu_pipeline_demo.py          # spawns itself with 8 devices
+"""
+import os
+import subprocess
+import sys
+
+if os.environ.get("_ILU_DEMO_CHILD") != "1":
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["_ILU_DEMO_CHILD"] = "1"
+    sys.exit(subprocess.run([sys.executable, __file__], env=env).returncode)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import matgen, numeric_ilu_ref, pilu1_symbolic
+from repro.core.planner import make_plan
+from repro.core.top_ilu import topilu_numeric
+
+
+def main():
+    devs = jax.devices()
+    print(f"devices: {len(devs)} (simulated ring)")
+    n, band_rows = 512, 16
+    a = matgen(n, density=0.02, seed=3)
+    pat = pilu1_symbolic(a)  # PILU(1): zero-communication symbolic phase
+    plan = make_plan(a, pat, band_rows=band_rows, n_devices=len(devs))
+    print(f"n={n} nnz={pat.nnz}  bands={plan.n_bands} x {band_rows} rows, "
+          f"round-robin over {len(devs)} devices")
+
+    want = numeric_ilu_ref(a, pat)
+    for broadcast in ("psum", "ring"):
+        t0 = time.perf_counter()
+        got = topilu_numeric(a, pat, band_rows=band_rows, broadcast=broadcast)
+        dt = time.perf_counter() - t0
+        ok = np.array_equal(got.view(np.int32), want.view(np.int32))
+        print(f"broadcast={broadcast:5s}: {dt*1e3:7.1f} ms  "
+              f"bitwise-equal={'YES' if ok else 'NO'}")
+        assert ok
+    print("\nThe psum broadcast lowers to XLA's ring all-reduce — the same "
+          "aggregate-bandwidth pipeline the paper hand-builds (Fig 4).")
+
+
+if __name__ == "__main__":
+    main()

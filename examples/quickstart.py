@@ -1,0 +1,45 @@
+"""Quickstart: factor a diagonally-dominant sparse matrix with ILU(k) and
+solve Ax=b with preconditioned GMRES — the paper's end-to-end use case.
+
+    PYTHONPATH=src python examples/quickstart.py [n] [k]
+"""
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import matgen
+from repro.core.api import ilu
+from repro.core.solvers import solve_with_ilu
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 1000
+    k = int(sys.argv[2]) if len(sys.argv) > 2 else 1
+
+    print(f"matgen: n={n}, density={min(0.08, 20.0/n):.4f}")
+    a = matgen(n, density=min(0.08, 20.0 / n), seed=0)
+
+    print(f"\n-- ILU({k}) factorization (symbolic=PILU(1) fast path for k=1) --")
+    fact = ilu(a, k, backend="jax")
+    print(f"entries: {a.nnz} -> {fact.nnz} "
+          f"(fill ratio {fact.nnz / a.nnz:.2f})")
+    print(f"symbolic {fact.symbolic_seconds*1e3:.1f} ms, "
+          f"numeric {fact.numeric_seconds*1e3:.1f} ms")
+
+    b = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    print("\n-- BiCGSTAB --")
+    plain, _ = solve_with_ilu(a, b, k=None, method="bicgstab", maxiter=400)
+    pre, _ = solve_with_ilu(a, b, k=k, method="bicgstab", maxiter=400)
+    print(f"no preconditioner : {plain.iterations:4d} iters, residual {plain.residual:.2e}")
+    print(f"ILU({k})            : {pre.iterations:4d} iters, residual {pre.residual:.2e}")
+    assert pre.converged
+    print("\nbit-compat check vs sequential oracle ...", end=" ")
+    ref = ilu(a, k, backend="oracle")
+    assert np.array_equal(fact.vals.view(np.int32), ref.vals.view(np.int32))
+    print("BITWISE EQUAL ✓")
+
+
+if __name__ == "__main__":
+    main()

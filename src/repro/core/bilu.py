@@ -1,0 +1,156 @@
+"""BILU(k): Block-ILU with fill levels on the 128x128 *tile* graph.
+
+The beyond-paper TPU adaptation (DESIGN.md §3). The paper's scalar
+row-merge is memory-bound on any modern machine (§II: "accesses lots of
+memory while using relatively little floating-point arithmetic"). On a TPU
+the fix is structural: promote the sparsity pattern to MXU-shaped tiles, so
+the numeric phase becomes dense tile GEMMs/TRSMs executed by the Pallas
+kernels in ``repro.kernels``:
+
+* symbolic phase — *reuses the paper's Algorithm 1 verbatim* on the tile
+  adjacency matrix (a tile is an "entry"; levels/fill rules unchanged),
+* numeric phase — block right-looking LU restricted to the tile pattern:
+    pivot I:  A_II = L_II U_II            (in-tile dense LU, no pivoting)
+              L_JI = A_JI U_II^{-1}       (Pallas trsm_right_upper)
+              U_IT = L_II^{-1} A_IT       (Pallas trsm_left_unit_lower)
+              A_JT -= L_JI @ U_IT         (Pallas panel_update)
+
+BILU(k) is a *different* (denser) preconditioner than scalar ILU(k) — it
+keeps every scalar ILU(k) entry plus tile padding, so it is at least as
+strong; it is NOT bit-compatible with the scalar algorithm and is recorded
+separately in EXPERIMENTS.md §Perf. Band/TOP-ILU parallelization applies
+unchanged with "tile row-block" substituted for "row" — the band pipeline
+ships finished tile rows instead of scalar rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .sparse import CSRMatrix, ILUPattern
+from .symbolic import symbolic_ilu_k
+
+
+@dataclasses.dataclass
+class BILUFactorization:
+    n: int
+    bs: int
+    n_tiles: int  # tiles per side
+    tile_pattern: ILUPattern  # pattern over the tile graph
+    tiles: np.ndarray  # (T, bs, bs) f32 — L (strict lower)/U (upper) per tile
+    tile_index: Dict[Tuple[int, int], int]
+
+    def to_dense_lu(self):
+        """Materialize dense L (unit diag) and U — tests only."""
+        nt, bs = self.n_tiles, self.bs
+        nd = nt * bs
+        L = np.eye(nd, dtype=np.float32)
+        U = np.zeros((nd, nd), dtype=np.float32)
+        for (i, j), t in self.tile_index.items():
+            blk = self.tiles[t]
+            ys, xs = i * bs, j * bs
+            if i > j:
+                L[ys : ys + bs, xs : xs + bs] = blk
+            elif i < j:
+                U[ys : ys + bs, xs : xs + bs] = blk
+            else:
+                L[ys : ys + bs, xs : xs + bs] = np.tril(blk, -1) + np.eye(bs, dtype=np.float32)
+                U[ys : ys + bs, xs : xs + bs] = np.triu(blk)
+        return L[: self.n, : self.n], U[: self.n, : self.n]
+
+
+def tile_adjacency(a: CSRMatrix, bs: int) -> CSRMatrix:
+    """Tile-level adjacency matrix (1 where any scalar entry falls in tile)."""
+    nt = -(-a.n // bs)
+    import scipy.sparse as sp
+
+    rows = np.repeat(np.arange(a.n), np.diff(a.indptr)) // bs
+    cols = a.indices // bs
+    m = sp.csr_matrix((np.ones(len(cols), np.float32), (rows, cols.astype(np.int64))), shape=(nt, nt))
+    m = m + sp.eye(nt, format="csr", dtype=np.float32)  # diagonal tiles always present
+    m.sum_duplicates()
+    m.data[:] = 1.0
+    return CSRMatrix.from_scipy(m)
+
+
+def _lu_nopiv(tile):
+    """Dense in-tile LU without pivoting (diagonal dominance assumption).
+    Returns the packed tile: strict-lower = L, upper = U."""
+    bs = tile.shape[0]
+
+    def col(c, t):
+        piv = t[c, c]
+        col_mask = (jnp.arange(bs) > c).astype(t.dtype)
+        l = (t[:, c] / piv) * col_mask
+        t = t.at[:, c].set(jnp.where(jnp.arange(bs) > c, l, t[:, c]))
+        row = jnp.where(jnp.arange(bs) > c, t[c, :], 0.0)
+        t = t - jnp.outer(l, row)
+        # outer subtracted the pivot column too (row[c]=0 -> no) and rows <= c (l=0 -> no)
+        return t
+
+    return jax.lax.fori_loop(0, bs, col, tile)
+
+
+def bilu(a: CSRMatrix, k: int, bs: int = 32, rule: str = "sum") -> BILUFactorization:
+    """Block-ILU(k) factorization on bs-aligned tiles."""
+    adj = tile_adjacency(a, bs)
+    tpat = symbolic_ilu_k(adj, k, rule=rule)  # Algorithm 1, tile granularity
+    nt = adj.n
+    # tile pool
+    index: Dict[Tuple[int, int], int] = {}
+    for i in range(nt):
+        cols, _ = tpat.row(i)
+        for c in cols:
+            index[(i, int(c))] = len(index)
+    tiles = np.zeros((len(index), bs, bs), dtype=np.float32)
+    # scatter A (padded rows/cols get identity diagonal to stay nonsingular)
+    for j in range(a.n):
+        cols, vals = a.row(j)
+        ti = j // bs
+        for c, v in zip(cols, vals):
+            tiles[index[(ti, int(c) // bs)], j % bs, int(c) % bs] = v
+    for j in range(a.n, nt * bs):
+        tiles[index[(j // bs, j // bs)], j % bs, j % bs] = 1.0
+
+    lu_nopiv = jax.jit(_lu_nopiv)
+    tiles_j = [jnp.asarray(t) for t in tiles]
+
+    for i in range(nt):  # pivot tile-row, ascending (right-looking)
+        di = index[(i, i)]
+        tiles_j[di] = lu_nopiv(tiles_j[di])
+        u_ii = jnp.triu(tiles_j[di])
+        l_ii = jnp.tril(tiles_j[di], -1) + jnp.eye(bs, dtype=jnp.float32)
+        urow_cols, _ = tpat.row(i)
+        urow = [int(c) for c in urow_cols if c > i]
+        # column panel below the pivot: all J > i with (J, i) in pattern
+        below = [j for j in range(i + 1, nt) if (j, i) in index]
+        for t in urow:
+            tiles_j[index[(i, t)]] = kops.trsm_left_unit_lower(l_ii, tiles_j[index[(i, t)]])
+        for jrow in below:
+            lj = kops.trsm_right_upper(tiles_j[index[(jrow, i)]], u_ii)
+            tiles_j[index[(jrow, i)]] = lj
+            for t in urow:
+                key = (jrow, t)
+                if key in index:  # fill outside the level-k tile pattern is dropped
+                    key_idx = index[key]
+                    tiles_j[key_idx] = kops.panel_update(
+                        tiles_j[key_idx], lj, tiles_j[index[(i, t)]]
+                    )
+    out = np.stack([np.asarray(t) for t in tiles_j])
+    return BILUFactorization(
+        n=a.n, bs=bs, n_tiles=nt, tile_pattern=tpat, tiles=out, tile_index=index
+    )
+
+
+def bilu_scalar_pattern(fact: BILUFactorization) -> np.ndarray:
+    """Dense boolean mask of the scalar positions BILU keeps — for tests."""
+    nd = fact.n_tiles * fact.bs
+    m = np.zeros((nd, nd), dtype=bool)
+    for (i, j) in fact.tile_index:
+        m[i * fact.bs : (i + 1) * fact.bs, j * fact.bs : (j + 1) * fact.bs] = True
+    return m[: fact.n, : fact.n]

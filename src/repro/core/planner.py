@@ -1,0 +1,155 @@
+"""Static band/frontier planner — the bridge from Phase I to the device.
+
+The paper organizes the matrix as *bands* of consecutive rows (§IV-A,
+Fig 3); the *frontier* is the last completely-reduced row (Def 4.1); bands
+are owned round-robin by nodes (static load balancing, §IV-D).
+
+On TPU everything must be static-shaped, so this planner turns a symbolic
+pattern (`ILUPattern`) into a :class:`NumericPlan`:
+
+* padded ELL storage (``cols``/``diag_pos``) — static structure,
+* per-row *band pivot offsets* ``pivot_start[j, b]`` = number of entries of
+  row j strictly left of column ``b*band_rows`` (clipped to the diagonal),
+  so the pivots of row j falling in band b occupy ELL positions
+  ``[pivot_start[j,b], pivot_start[j,b+1])``,
+* static trip-count bounds (``max_pivots_per_band``, ``max_intra_pivots``),
+* the device-major band permutation used to shard bands round-robin.
+
+Because the pattern is planning output, column indices are *replicated*
+device-side rather than communicated — the paper ships 8 bytes/entry
+(column + value, §V-E); we ship 4 (value only). Recorded in §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .sparse import CSRMatrix, ELLMatrix, ILUPattern
+
+#: Column sentinel for ELL padding. Must be larger than any valid column so
+#: padded rows remain sorted (device code uses ``searchsorted``).
+COL_SENTINEL = np.int32(2**30)
+
+
+@dataclasses.dataclass
+class NumericPlan:
+    n: int  # original dimension
+    n_pad: int
+    width: int  # ELL width W
+    band_rows: int  # R
+    n_bands: int  # B (padded to a multiple of n_devices)
+    n_devices: int  # D
+    k: int
+
+    cols: np.ndarray  # (n_pad, W) int32, -1 padded
+    diag_pos: np.ndarray  # (n_pad,) int32
+    row_len: np.ndarray  # (n_pad,) int32
+    a_vals: np.ndarray  # (n_pad, W) f32 — A scattered on the pattern
+    pivot_start: np.ndarray  # (n_pad, B+1) int32
+    band_of_row: np.ndarray  # (n_pad,) int32
+
+    max_pivots_per_band: int  # bound for inter-band partial reductions
+    max_intra_pivots: int  # bound for finishing a band
+
+    # --- band sharding (device-major permutation) -------------------------
+    @property
+    def bands_per_device(self) -> int:
+        return self.n_bands // self.n_devices
+
+    def band_to_slot(self) -> np.ndarray:
+        """slot index (device-major) for each band: band b -> device b%D, slot b//D."""
+        b = np.arange(self.n_bands)
+        return (b % self.n_devices) * self.bands_per_device + b // self.n_devices
+
+    def rows_device_major(self, x: np.ndarray) -> np.ndarray:
+        """Reorder a row-indexed array into device-major band order."""
+        perm = self.band_to_slot()
+        banded = x.reshape(self.n_bands, self.band_rows, *x.shape[1:])
+        out = np.empty_like(banded)
+        out[perm] = banded
+        return out.reshape(x.shape)
+
+    def rows_from_device_major(self, x: np.ndarray) -> np.ndarray:
+        perm = self.band_to_slot()
+        banded = x.reshape(self.n_bands, self.band_rows, *x.shape[1:])
+        return banded[perm].reshape(x.shape)
+
+
+def make_plan(
+    a: CSRMatrix,
+    pattern: ILUPattern,
+    band_rows: int,
+    n_devices: int = 1,
+) -> NumericPlan:
+    """Build the static numeric-phase plan from the filled pattern."""
+    assert band_rows >= 1 and n_devices >= 1
+    n = pattern.n
+    # pad rows so that n_pad = B * R with B a multiple of D
+    bands = -(-n // band_rows)
+    bands = -(-bands // n_devices) * n_devices
+    n_pad = bands * band_rows
+
+    ell = ELLMatrix.from_pattern(pattern, a, pad_rows_to=1)
+    W = ell.width
+    cols = np.full((n_pad, W), COL_SENTINEL, dtype=np.int32)
+    vals = np.zeros((n_pad, W), dtype=np.float32)
+    diag_pos = np.zeros(n_pad, dtype=np.int32)
+    row_len = np.zeros(n_pad, dtype=np.int32)
+    ell_cols = ell.cols.copy()
+    ell_cols[ell_cols < 0] = COL_SENTINEL  # ELLMatrix pads with -1
+    cols[: ell.n] = ell_cols
+    vals[: ell.n] = ell.vals
+    diag_pos[: ell.n] = ell.diag_pos
+    row_len[: ell.n] = ell.row_len
+    for j in range(ell.n, n_pad):  # identity padding rows
+        cols[j, 0] = j
+        vals[j, 0] = 1.0
+        row_len[j] = 1
+
+    # pivot_start[j, b] = #entries of row j with col < b*R, clipped to diag_pos
+    boundaries = np.arange(bands + 1, dtype=np.int64) * band_rows
+    pivot_start = np.zeros((n_pad, bands + 1), dtype=np.int32)
+    for j in range(n_pad):
+        m = int(row_len[j])
+        ps = np.searchsorted(cols[j, :m].astype(np.int64), boundaries, side="left")
+        pivot_start[j] = np.minimum(ps, diag_pos[j])
+
+    band_of_row = (np.arange(n_pad) // band_rows).astype(np.int32)
+
+    # static trip-count bounds
+    counts = np.diff(pivot_start, axis=1)  # (n_pad, B)
+    intra = counts[np.arange(n_pad), band_of_row]
+    inter = counts.copy()
+    inter[np.arange(n_pad), band_of_row] = 0
+    max_intra = int(intra.max()) if n_pad else 0
+    max_inter = int(inter.max()) if n_pad else 0
+
+    return NumericPlan(
+        n=n,
+        n_pad=n_pad,
+        width=W,
+        band_rows=band_rows,
+        n_bands=bands,
+        n_devices=n_devices,
+        k=pattern.k,
+        cols=cols,
+        diag_pos=diag_pos,
+        row_len=row_len,
+        a_vals=vals,
+        pivot_start=pivot_start,
+        band_of_row=band_of_row,
+        max_pivots_per_band=max(max_inter, 1),
+        max_intra_pivots=max(max_intra, 1),
+    )
+
+
+def plan_comm_bytes_per_node(plan: NumericPlan, faithful: bool = True) -> int:
+    """Paper §V-E communication model: ~8 bytes/final-entry per node.
+
+    ``faithful=False`` counts the TPU variant (static structure replicated,
+    values only -> 4 bytes/entry).
+    """
+    per_entry = 8 if faithful else 4
+    nnz = int(np.sum(plan.row_len[: plan.n]))
+    return per_entry * nnz

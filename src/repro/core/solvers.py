@@ -1,0 +1,204 @@
+"""Preconditioned iterative solvers (JAX): GMRES(m), BiCGSTAB, CG.
+
+These are the *consumers* of the ILU(k) preconditioner — the paper's point
+is that preconditioning time dominates the solver as processors scale, so a
+real system must include the solver to measure anything meaningful
+(paper §I, §V-B).
+
+All solvers take ``matvec`` (A·x) and ``precond`` (M^{-1}·x, identity if
+None) as functions, run in float32, and report iteration counts + residual
+history so tests/benches can reproduce the paper's "larger k => fewer
+iterations" trade-off (Fig 5 discussion).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .planner import COL_SENTINEL
+
+
+@dataclasses.dataclass
+class SolveResult:
+    x: np.ndarray
+    iterations: int
+    residual: float
+    converged: bool
+    history: np.ndarray  # residual norm per (outer) iteration
+
+
+def make_ell_matvec(cols: jnp.ndarray, vals: jnp.ndarray, n: int) -> Callable:
+    """Row-major ELL SpMV — the jnp reference the Pallas kernel must match."""
+    def matvec(x):
+        xg = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+        gathered = xg[jnp.minimum(cols, n)]
+        return jnp.sum(jnp.where(cols < COL_SENTINEL, vals * gathered, 0.0), axis=1)[:n]
+    return matvec
+
+
+def csr_to_ell_arrays(a):
+    """CSRMatrix -> (cols, vals) sentinel-padded ELL arrays."""
+    lens = np.diff(a.indptr)
+    W = int(lens.max())
+    cols = np.full((a.n, W), COL_SENTINEL, np.int32)
+    vals = np.zeros((a.n, W), np.float32)
+    for j in range(a.n):
+        c, v = a.row(j)
+        cols[j, : len(c)] = c
+        vals[j, : len(v)] = v
+    return jnp.asarray(cols), jnp.asarray(vals)
+
+
+def _identity(x):
+    return x
+
+
+# --------------------------------------------------------------------------
+# CG (SPD systems — e.g. the Poisson benchmark)
+# --------------------------------------------------------------------------
+def cg(matvec, b, precond=None, tol=1e-5, maxiter=500):
+    M = precond or _identity
+    b = jnp.asarray(b, jnp.float32)
+    bnorm = jnp.linalg.norm(b)
+
+    def body(carry):
+        x, r, z, p, rz, it, _ = carry
+        ap = matvec(p)
+        alpha = rz / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = M(r)
+        rz_new = jnp.vdot(r, z)
+        p = z + (rz_new / rz) * p
+        return x, r, z, p, rz_new, it + 1, jnp.linalg.norm(r)
+
+    def cond(carry):
+        *_, it, rnorm = carry
+        return (rnorm > tol * bnorm) & (it < maxiter)
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    z0 = M(r0)
+    carry = (x0, r0, z0, z0, jnp.vdot(r0, z0), jnp.int32(0), jnp.linalg.norm(r0))
+    x, r, *_, it, rnorm = jax.lax.while_loop(cond, body, carry)
+    rel = float(rnorm / bnorm)
+    return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01, np.asarray([rel]))
+
+
+# --------------------------------------------------------------------------
+# BiCGSTAB (general nonsymmetric)
+# --------------------------------------------------------------------------
+def bicgstab(matvec, b, precond=None, tol=1e-5, maxiter=500):
+    M = precond or _identity
+    b = jnp.asarray(b, jnp.float32)
+    bnorm = jnp.linalg.norm(b)
+
+    def body(carry):
+        x, r, rhat, p, v, rho, alpha, omega, it, _ = carry
+        rho_new = jnp.vdot(rhat, r)
+        beta = (rho_new / rho) * (alpha / omega)
+        p = r + beta * (p - omega * v)
+        phat = M(p)
+        v = matvec(phat)
+        alpha = rho_new / jnp.vdot(rhat, v)
+        s = r - alpha * v
+        shat = M(s)
+        t = matvec(shat)
+        omega = jnp.vdot(t, s) / jnp.vdot(t, t)
+        x = x + alpha * phat + omega * shat
+        r = s - omega * t
+        return x, r, rhat, p, v, rho_new, alpha, omega, it + 1, jnp.linalg.norm(r)
+
+    def cond(carry):
+        *_, it, rnorm = carry
+        return (rnorm > tol * bnorm) & (it < maxiter) & jnp.isfinite(rnorm)
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    carry = (
+        x0, r0, r0, jnp.zeros_like(b), jnp.zeros_like(b),
+        jnp.float32(1), jnp.float32(1), jnp.float32(1), jnp.int32(0), jnp.linalg.norm(r0),
+    )
+    out = jax.lax.while_loop(cond, body, carry)
+    x, *_, it, rnorm = out
+    rel = float(rnorm / bnorm)
+    return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01, np.asarray([rel]))
+
+
+# --------------------------------------------------------------------------
+# Restarted GMRES(m) with right preconditioning
+# --------------------------------------------------------------------------
+def gmres(matvec, b, precond=None, restart=30, tol=1e-5, maxiter=20):
+    """maxiter counts *outer* restarts. Solves A (M^{-1} u) = b, x = M^{-1} u."""
+    M = precond or _identity
+    b = jnp.asarray(b, jnp.float32)
+    n = b.shape[0]
+    bnorm = float(jnp.linalg.norm(b))
+    m = restart
+
+    @jax.jit
+    def inner(x0):
+        r0 = b - matvec(x0)
+        beta = jnp.linalg.norm(r0)
+        V = jnp.zeros((m + 1, n), jnp.float32).at[0].set(r0 / beta)
+        H = jnp.zeros((m + 1, m), jnp.float32)
+
+        def arnoldi(carry, j):
+            V, H = carry
+            w = matvec(M(V[j]))
+            # modified Gram-Schmidt
+            def mgs(i, wh):
+                w, H = wh
+                hij = jnp.vdot(V[i], w) * (i <= j)
+                H = H.at[i, j].set(hij)
+                return w - hij * V[i], H
+            w, H = jax.lax.fori_loop(0, m + 1, lambda i, wh: mgs(i, wh), (w, H))
+            hnext = jnp.linalg.norm(w)
+            H = H.at[j + 1, j].set(hnext)
+            V = V.at[j + 1].set(w / jnp.maximum(hnext, 1e-30))
+            return (V, H), hnext
+
+        (V, H), _ = jax.lax.scan(arnoldi, (V, H), jnp.arange(m))
+        # solve min || beta e1 - H y ||
+        e1 = jnp.zeros(m + 1, jnp.float32).at[0].set(beta)
+        y, *_ = jnp.linalg.lstsq(H, e1, rcond=None)
+        u = V[:m].T @ y
+        x = x0 + M(u)
+        rnorm = jnp.linalg.norm(b - matvec(x))
+        return x, rnorm
+
+    x = jnp.zeros_like(b)
+    history = []
+    it = 0
+    rnorm = bnorm
+    for it in range(1, maxiter + 1):
+        x, rn = inner(x)
+        rnorm = float(rn)
+        history.append(rnorm / bnorm)
+        if rnorm <= tol * bnorm:
+            break
+    rel = rnorm / bnorm
+    return SolveResult(np.asarray(x), it * m, rel, rel <= tol * 1.01, np.asarray(history))
+
+
+def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
+                   band_rows=32, **kw):
+    """End-to-end: factorize with ILU(k), then solve. Returns (SolveResult, fact)."""
+    from .api import ilu
+    from .triangular import make_triangular_solver
+
+    cols, vals = csr_to_ell_arrays(a)
+    matvec = make_ell_matvec(cols, vals, a.n)
+    fact = None
+    precond = None
+    if k is not None:
+        fact = ilu(a, k, backend=backend, band_rows=band_rows)
+        precond = make_triangular_solver(fact.pattern, fact.vals)
+    fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]
+    res = fn(matvec, jnp.asarray(b, jnp.float32), precond, tol=tol, **kw)
+    return res, fact

@@ -1,0 +1,219 @@
+"""Sparse matrix containers used by the ILU(k) core.
+
+Two host-side containers:
+
+* :class:`CSRMatrix` — the canonical row-major storage the paper describes
+  ("each matrix is an array of rows, each of them is an array of entries").
+* :class:`ILUPattern` — the *filled* pattern produced by symbolic
+  factorization: CSR structure + per-entry ILU level.
+
+And one device-side container:
+
+* :class:`ELLMatrix` — fixed-width padded rows (static shapes for JAX/TPU).
+
+All column indices are sorted ascending within a row; the diagonal entry is
+required to be present (standard ILU(k) breakdown-free assumption under
+diagonal dominance, §VI of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRMatrix:
+    """Row-major sparse matrix: (indptr, indices, data)."""
+
+    n: int
+    indptr: np.ndarray  # (n+1,) int64
+    indices: np.ndarray  # (nnz,) int32, sorted per row
+    data: np.ndarray  # (nnz,) float32
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def from_scipy(mat) -> "CSRMatrix":
+        m = mat.tocsr()
+        m.sort_indices()
+        return CSRMatrix(
+            n=m.shape[0],
+            indptr=np.asarray(m.indptr, dtype=np.int64),
+            indices=np.asarray(m.indices, dtype=np.int32),
+            data=np.asarray(m.data, dtype=np.float32),
+        )
+
+    @staticmethod
+    def from_dense(a: np.ndarray) -> "CSRMatrix":
+        n = a.shape[0]
+        indptr = [0]
+        indices = []
+        data = []
+        for j in range(n):
+            nz = np.nonzero(a[j])[0]
+            indices.append(nz)
+            data.append(a[j, nz])
+            indptr.append(indptr[-1] + len(nz))
+        return CSRMatrix(
+            n=n,
+            indptr=np.asarray(indptr, dtype=np.int64),
+            indices=np.concatenate(indices).astype(np.int32) if indices else np.zeros(0, np.int32),
+            data=np.concatenate(data).astype(np.float32) if data else np.zeros(0, np.float32),
+        )
+
+    # -- views -------------------------------------------------------------
+    def row(self, j: int) -> Tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[j], self.indptr[j + 1]
+        return self.indices[s:e], self.data[s:e]
+
+    def to_scipy(self):
+        import scipy.sparse as sp
+
+        return sp.csr_matrix((self.data, self.indices, self.indptr), shape=(self.n, self.n))
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n, self.n), dtype=np.float32)
+        for j in range(self.n):
+            cols, vals = self.row(j)
+            out[j, cols] = vals
+        return out
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(self.n * self.n)
+
+    def has_full_diagonal(self) -> bool:
+        for j in range(self.n):
+            cols, _ = self.row(j)
+            pos = np.searchsorted(cols, j)
+            if pos >= len(cols) or cols[pos] != j:
+                return False
+        return True
+
+
+@dataclasses.dataclass
+class ILUPattern:
+    """Filled-matrix pattern: CSR structure + ILU levels per entry.
+
+    ``diag_ptr[j]`` is the offset *within row j* of the diagonal entry.
+    """
+
+    n: int
+    k: int
+    indptr: np.ndarray  # (n+1,) int64
+    indices: np.ndarray  # (nnz,) int32 sorted per row
+    levels: np.ndarray  # (nnz,) int16
+    diag_ptr: np.ndarray  # (n,) int32 — local offset of the diagonal in each row
+
+    def row(self, j: int) -> Tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[j], self.indptr[j + 1]
+        return self.indices[s:e], self.levels[s:e]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    def dense_mask(self) -> np.ndarray:
+        mask = np.zeros((self.n, self.n), dtype=bool)
+        for j in range(self.n):
+            cols, _ = self.row(j)
+            mask[j, cols] = True
+        return mask
+
+    def validate(self) -> None:
+        assert self.indptr[0] == 0 and self.indptr[-1] == len(self.indices)
+        for j in range(self.n):
+            cols, levs = self.row(j)
+            assert np.all(np.diff(cols) > 0), f"row {j} not strictly sorted"
+            d = self.diag_ptr[j]
+            assert cols[d] == j, f"row {j} missing diagonal"
+            assert np.all(levs <= self.k)
+            assert np.all(levs >= 0)
+
+
+@dataclasses.dataclass
+class ELLMatrix:
+    """Padded fixed-width rows — the static-shape device format.
+
+    ``cols[j, p] == -1`` marks padding; ``vals`` at padding is 0. The extra
+    trailing scratch column (index ``width``) absorbs masked scatters.
+    """
+
+    n: int
+    width: int
+    cols: np.ndarray  # (n, width) int32, -1 padded
+    vals: np.ndarray  # (n, width) float32
+    diag_pos: np.ndarray  # (n,) int32
+    row_len: np.ndarray  # (n,) int32
+
+    @staticmethod
+    def from_pattern(pattern: ILUPattern, a: CSRMatrix, pad_rows_to: int = 1) -> "ELLMatrix":
+        """Scatter A's values onto the filled pattern (fills start at 0)."""
+        lens = pattern.row_lengths()
+        width = int(lens.max())
+        n_pad = ((pattern.n + pad_rows_to - 1) // pad_rows_to) * pad_rows_to
+        cols = np.full((n_pad, width), -1, dtype=np.int32)
+        vals = np.zeros((n_pad, width), dtype=np.float32)
+        diag_pos = np.zeros(n_pad, dtype=np.int32)
+        row_len = np.zeros(n_pad, dtype=np.int32)
+        for j in range(pattern.n):
+            pcols, _ = pattern.row(j)
+            m = len(pcols)
+            cols[j, :m] = pcols
+            acols, avals = a.row(j)
+            pos = np.searchsorted(pcols, acols)
+            # every A entry must exist in the filled pattern (level-0 entries)
+            assert np.all(pcols[pos] == acols)
+            vals[j, pos] = avals
+            diag_pos[j] = pattern.diag_ptr[j]
+            row_len[j] = m
+        # padded rows: identity diagonal so divisions stay finite
+        for j in range(pattern.n, n_pad):
+            cols[j, 0] = j
+            vals[j, 0] = 1.0
+            diag_pos[j] = 0
+            row_len[j] = 1
+        return ELLMatrix(n=n_pad, width=width, cols=cols, vals=vals, diag_pos=diag_pos, row_len=row_len)
+
+    def values_csr(self, pattern: ILUPattern) -> np.ndarray:
+        """Flatten padded vals back onto the pattern's CSR layout."""
+        out = np.zeros(pattern.nnz, dtype=np.float32)
+        for j in range(pattern.n):
+            s, e = pattern.indptr[j], pattern.indptr[j + 1]
+            out[s:e] = self.vals[j, : e - s]
+        return out
+
+
+def split_lu(pattern: ILUPattern, vals: np.ndarray):
+    """Split filled values into scipy L (unit lower) and U (upper) factors."""
+    import scipy.sparse as sp
+
+    n = pattern.n
+    rows_l, cols_l, data_l = [], [], []
+    rows_u, cols_u, data_u = [], [], []
+    for j in range(n):
+        s, e = pattern.indptr[j], pattern.indptr[j + 1]
+        cols = pattern.indices[s:e]
+        v = vals[s:e]
+        below = cols < j
+        rows_l.extend([j] * int(below.sum()))
+        cols_l.extend(cols[below].tolist())
+        data_l.extend(v[below].tolist())
+        rows_l.append(j)
+        cols_l.append(j)
+        data_l.append(1.0)
+        above = cols >= j
+        rows_u.extend([j] * int(above.sum()))
+        cols_u.extend(cols[above].tolist())
+        data_u.extend(v[above].tolist())
+    L = sp.csr_matrix((data_l, (rows_l, cols_l)), shape=(n, n))
+    U = sp.csr_matrix((data_u, (rows_u, cols_u)), shape=(n, n))
+    return L, U

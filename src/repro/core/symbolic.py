@@ -1,0 +1,179 @@
+"""Symbolic factorization — Phase I of ILU(k) (paper Algorithm 1).
+
+Computes the filled pattern and per-entry levels. Two level rules are
+supported (paper §III-B):
+
+* ``sum``:  level(j,t) = min over h of level(j,h) + level(h,t) + 1
+* ``max``:  level(j,t) = min over h of max(level(j,h), level(h,t)) + 1
+
+Original entries of A have level 0; fill-ins with level <= k are admitted.
+(The paper's Alg. 1 line 22 prints ``weight < k``; Definition 3.4 and the
+standard ILU(k) literature use ``<= k``, which is what we implement.)
+
+The paper's Phase-I optimization (§III-D) is applied: a pivot entry whose
+level already equals k cannot cause any admissible fill (its weight is
+>= k+1 under either rule, and cannot lower an existing level), so it is
+skipped during the row-merge.
+
+`pilu1_symbolic` is the PILU(1) special case (§IV-F): for k=1 only level-0
+(original) entries act as causative entries, so every row's pattern depends
+only on rows of *A* — rows are independent and the phase needs **zero
+communication**. We exploit exactly that independence with a vectorized
+row-at-a-time NumPy computation (and it is what makes the phase
+embarrassingly parallel across devices/hosts).
+
+On TPU this phase is the host-side *planning pass* (see DESIGN.md §3): its
+output (a static pattern) is what makes the numeric phase jit-able.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .sparse import CSRMatrix, ILUPattern
+
+
+def _row_merge(cols_j, levs_j, j, k, rule, row_cols, row_levs, diag_of):
+    """Reduce row j symbolically against all pivot rows i < j.
+
+    cols_j/levs_j: current (sorted) pattern of row j. Returns final arrays.
+    """
+    ptr = 0
+    while ptr < len(cols_j):
+        i = cols_j[ptr]
+        if i >= j:
+            break
+        li = levs_j[ptr]
+        ptr += 1
+        if li >= k:  # paper §III-D optimization — cannot cause admissible fill
+            continue
+        # tail of pivot row i: entries strictly right of the diagonal
+        di = diag_of[i]
+        tcols = row_cols[i][di + 1 :]
+        tlevs = row_levs[i][di + 1 :]
+        if len(tcols) == 0:
+            continue
+        if rule == "sum":
+            weight = li + tlevs + 1
+        else:  # max rule
+            weight = np.maximum(li, tlevs) + 1
+        pos = np.searchsorted(cols_j, tcols)
+        in_bounds = pos < len(cols_j)
+        present = np.zeros(len(tcols), dtype=bool)
+        present[in_bounds] = cols_j[pos[in_bounds]] == tcols[in_bounds]
+        # update existing levels
+        upd = pos[present]
+        levs_j[upd] = np.minimum(levs_j[upd], weight[present])
+        # insert admissible fills
+        newmask = (~present) & (weight <= k)
+        if newmask.any():
+            ncols = tcols[newmask]
+            nlevs = weight[newmask]
+            ipos = np.searchsorted(cols_j, ncols)
+            cols_j = np.insert(cols_j, ipos, ncols)
+            levs_j = np.insert(levs_j, ipos, nlevs)
+            # all inserted columns are > i, so `ptr` (already past i) stays
+            # valid, but positions may have shifted for un-scanned pivots:
+            # recompute ptr as the index just past column i.
+            ptr = int(np.searchsorted(cols_j, i, side="right"))
+    return cols_j, levs_j
+
+
+def symbolic_ilu_k(a: CSRMatrix, k: int, rule: str = "sum") -> ILUPattern:
+    """Sequential symbolic ILU(k) — Algorithm 1 of the paper."""
+    assert rule in ("sum", "max")
+    n = a.n
+    row_cols = [None] * n
+    row_levs = [None] * n
+    diag_of = np.zeros(n, dtype=np.int64)
+    for j in range(n):
+        acols, _ = a.row(j)
+        cols_j = acols.astype(np.int64).copy()
+        levs_j = np.zeros(len(cols_j), dtype=np.int64)
+        d = np.searchsorted(cols_j, j)
+        assert d < len(cols_j) and cols_j[d] == j, f"row {j}: missing diagonal"
+        if k > 0:
+            cols_j, levs_j = _row_merge(cols_j, levs_j, j, k, rule, row_cols, row_levs, diag_of)
+        row_cols[j] = cols_j
+        row_levs[j] = levs_j
+        diag_of[j] = np.searchsorted(cols_j, j)
+    return _pack(n, k, row_cols, row_levs, diag_of)
+
+
+def pilu1_symbolic(a: CSRMatrix, rule: str = "sum") -> ILUPattern:
+    """PILU(1): embarrassingly parallel symbolic factorization for k = 1.
+
+    Row j's final pattern = A's row j plus every t > i reachable through a
+    level-0 causative pair (f_{j,i}, f_{i,t}) with i < j — using only rows of
+    the *original* A. (Under either rule the weight of such a fill is 1.)
+    """
+    n = a.n
+    row_cols = [None] * n
+    row_levs = [None] * n
+    diag_of = np.zeros(n, dtype=np.int64)
+    # Pre-slice A's rows once (these are the only data any row needs).
+    a_cols = [a.row(j)[0].astype(np.int64) for j in range(n)]
+    a_diag = [int(np.searchsorted(a_cols[j], j)) for j in range(n)]
+    for j in range(n):
+        base = a_cols[j]
+        pivots = base[base < j]
+        fill_blocks = []
+        for i in pivots:
+            tail = a_cols[i][a_diag[i] + 1 :]
+            if len(tail):
+                fill_blocks.append(tail)
+        if fill_blocks:
+            fills = np.unique(np.concatenate(fill_blocks))
+            fills = fills[~np.isin(fills, base, assume_unique=True)]
+        else:
+            fills = np.zeros(0, dtype=np.int64)
+        cols_j = np.sort(np.concatenate([base, fills]))
+        levs_j = np.zeros(len(cols_j), dtype=np.int64)
+        if len(fills):
+            levs_j[np.searchsorted(cols_j, fills)] = 1
+        row_cols[j] = cols_j
+        row_levs[j] = levs_j
+        diag_of[j] = np.searchsorted(cols_j, j)
+    return _pack(n, 1, row_cols, row_levs, diag_of)
+
+
+def _pack(n, k, row_cols, row_levs, diag_of) -> ILUPattern:
+    lens = np.asarray([len(c) for c in row_cols], dtype=np.int64)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    return ILUPattern(
+        n=n,
+        k=k,
+        indptr=indptr,
+        indices=np.concatenate(row_cols).astype(np.int32),
+        levels=np.concatenate(row_levs).astype(np.int16),
+        diag_ptr=diag_of.astype(np.int32),
+    )
+
+
+def symbolic_ilu_k_bruteforce(a: CSRMatrix, k: int, rule: str = "sum") -> np.ndarray:
+    """O(n^3) dense level computation straight from Definition 3.4.
+
+    Returns the (n, n) level matrix with np.iinfo.max for non-entries.
+    Only for tests on tiny matrices.
+    """
+    n = a.n
+    INF = np.int64(10**9)
+    lev = np.full((n, n), INF, dtype=np.int64)
+    for j in range(n):
+        cols, _ = a.row(j)
+        lev[j, cols] = 0
+    for h in range(n):
+        for i in range(h + 1, n):
+            if lev[i, h] > k:  # not an admitted entry -> cannot be causative
+                continue
+            for t in range(h + 1, n):
+                if lev[h, t] > k:
+                    continue
+                if rule == "sum":
+                    w = lev[i, h] + lev[h, t] + 1
+                else:
+                    w = max(lev[i, h], lev[h, t]) + 1
+                if w < lev[i, t] and w <= k:
+                    lev[i, t] = w
+    lev[lev > k] = INF
+    return lev

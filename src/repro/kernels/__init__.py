@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the BILU(k) numeric phase + solver matvec.
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), wrapped by
+``ops.py`` (jit + padding + fallbacks), oracled by ``ref.py`` (pure jnp).
+Kernels target TPU VMEM/MXU; on CPU they run in interpret mode.
+"""
+
+from .ops import panel_update, spmv_ell, trsm_left_unit_lower, trsm_right_upper  # noqa: F401

@@ -1,0 +1,87 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, dtype policy, and the
+``REPRO_DISABLE_PALLAS`` escape hatch (falls back to the jnp references —
+useful for isolating kernel bugs and for platforms without Pallas).
+
+On this container (CPU) the kernels execute with ``interpret=True``; on TPU
+set ``REPRO_PALLAS_INTERPRET=0`` to compile them for real.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import panel_update as _pu
+from . import spmv_ell as _sp
+from . import tri_solve as _ts
+from . import ref as _ref
+
+_DISABLED = os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1"
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def _pad2(x, m0, m1, fill=0.0):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=fill)
+    return x
+
+
+def panel_update(c, a, b, bm=256, bn=256, bk=128):
+    """C - A @ B with automatic padding to block multiples."""
+    if _DISABLED:
+        return _ref.panel_update_ref(c, a, b)
+    m, n = c.shape
+    k = a.shape[1]
+    bm_, bn_, bk_ = min(bm, max(m, 8)), min(bn, max(n, 8)), min(bk, max(k, 8))
+    cp = _pad2(c, bm_, bn_)
+    ap = _pad2(a, bm_, bk_)
+    bp = _pad2(b, bk_, bn_)
+    out = _pu.panel_update(cp, ap, bp, bm=bm_, bn=bn_, bk=bk_, interpret=_interpret())
+    return out[:m, :n]
+
+
+def trsm_right_upper(a, u, bm=256):
+    """X = A @ U^{-1} (U upper-triangular)."""
+    if _DISABLED:
+        return _ref.trsm_right_upper_ref(a, u)
+    m, bs = a.shape
+    bm_ = min(bm, max(m, 8))
+    ap = _pad2(a, bm_, bs)
+    out = _ts.trsm_right_upper(ap, u, bm=bm_, interpret=_interpret())
+    return out[:m]
+
+
+def trsm_left_unit_lower(l, a, bn=256):
+    """X = L^{-1} @ A (L unit-lower-triangular)."""
+    if _DISABLED:
+        return _ref.trsm_left_unit_lower_ref(l, a)
+    bs, n = a.shape
+    bn_ = min(bn, max(n, 8))
+    ap = _pad2(a, bs, bn_)
+    out = _ts.trsm_left_unit_lower(l, ap, bn=bn_, interpret=_interpret())
+    return out[:, :n]
+
+
+def spmv_ell(cols, vals, x, bm=512):
+    """y = A @ x for sentinel-padded ELL A."""
+    if _DISABLED:
+        return _ref.spmv_ell_ref(cols, vals, x)
+    from repro.core.planner import COL_SENTINEL
+
+    n, w = cols.shape
+    bm_ = min(bm, max(n, 8))
+    pad = (-n) % bm_
+    if pad:
+        cols = jnp.pad(cols, ((0, pad), (0, 0)), constant_values=int(COL_SENTINEL))
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        x = jnp.pad(x, (0, pad))  # gathered only via masked lanes
+    out = _sp.spmv_ell(cols, vals, x, bm=bm_, interpret=_interpret())
+    return out[:n]

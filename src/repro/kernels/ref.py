@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's sweep test asserts allclose against these references across
+shapes and dtypes; the references are also what the rest of the system uses
+when ``REPRO_DISABLE_PALLAS=1``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import COL_SENTINEL
+
+
+def panel_update_ref(c, a, b):
+    """Trailing-panel LU update: C - A @ B (f32 accumulation)."""
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return (c.astype(jnp.float32) - acc).astype(c.dtype)
+
+
+def trsm_right_upper_ref(a, u):
+    """Solve X U = A with U upper-triangular (the BILU L-panel step:
+    L_JI = A_JI @ U_II^{-1})."""
+    xt = jax.scipy.linalg.solve_triangular(
+        u.T.astype(jnp.float32), a.T.astype(jnp.float32), lower=True
+    )
+    return xt.T.astype(a.dtype)
+
+
+def trsm_left_unit_lower_ref(l, a):
+    """Solve L X = A with L unit-lower (the BILU U-panel step:
+    U_IJ = L_II^{-1} @ A_IJ)."""
+    x = jax.scipy.linalg.solve_triangular(
+        l.astype(jnp.float32), a.astype(jnp.float32), lower=True, unit_diagonal=True
+    )
+    return x.astype(a.dtype)
+
+
+def spmv_ell_ref(cols, vals, x):
+    """Row-major ELL SpMV with sentinel-padded columns."""
+    n = x.shape[0]
+    xg = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+    gathered = xg[jnp.minimum(cols, n)]
+    return jnp.sum(jnp.where(cols < COL_SENTINEL, vals * gathered, 0.0), axis=1)

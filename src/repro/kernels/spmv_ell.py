@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: ELL SpMV — y = A x on sentinel-padded fixed-width rows.
+
+The per-iteration matvec of the preconditioned solver. Rows are tiled by the
+grid; each step holds a (bm, W) column/value block plus the full x vector in
+VMEM (x of n<=2^20 f32 = 4 MiB fits; shard x first for larger n — the
+mesh-level solver does exactly that). The inner gather ``x[cols]`` is a 1-D
+VMEM dynamic gather (supported natively on TPU v4+; interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.planner import COL_SENTINEL
+
+
+def _kernel(cols_ref, vals_ref, x_ref, o_ref):
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    x = x_ref[...]
+    n = x.shape[0]
+    idx = jnp.minimum(cols, n - 1)
+    gathered = x[idx]
+    mask = cols < COL_SENTINEL
+    o_ref[...] = jnp.sum(jnp.where(mask, vals * gathered, 0.0), axis=1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def spmv_ell(cols, vals, x, *, bm=512, interpret=True):
+    """cols/vals: (n, W) sentinel-padded; x: (n,). Returns y = A @ x."""
+    n, w = cols.shape
+    assert vals.shape == (n, w) and x.shape == (n,)
+    bm = min(bm, n)
+    assert n % bm == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)

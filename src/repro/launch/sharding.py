@@ -1,0 +1,225 @@
+"""Sharding rules: parameters, optimizer state, batches, KV caches.
+
+Policy (DESIGN.md §5):
+
+* TP over ``model``: attention q/o sharded on the head dim when
+  ``H % tp == 0`` (k/v when ``Hkv % tp == 0``; otherwise replicated — the
+  GQA kv<tp case, e.g. starcoder2), MLP hidden, MoE experts (EP when
+  ``E % tp == 0``, expert-TP otherwise), vocab-sharded embeddings/head.
+* DP over ``(pod, data)``: batches; ZeRO-1 additionally shards optimizer
+  moments over ``data``.
+* Decode caches: kv-head dim on ``model`` when divisible, else the cache
+  *sequence* dim (distributed decode attention); batch on ``data`` when
+  divisible.
+
+Every rule is guarded by a divisibility check — a dim that does not divide
+evenly falls back to replication rather than failing to lower.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_size, mesh_axis_sizes, tp_size
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def _dims(leaf) -> tuple:
+    return tuple(leaf.shape)
+
+
+class ShardingRules:
+    def __init__(self, cfg, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tp = tp_size(mesh)
+        self.axes = set(mesh.axis_names)
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in self.axes)
+
+    # -- helpers -----------------------------------------------------------
+    def _ok(self, size, axis="model") -> bool:
+        n = mesh_axis_sizes(self.mesh).get(axis, 1)
+        return size % n == 0 and n > 1
+
+    def _dp_ok(self, size) -> bool:
+        n = 1
+        for a in self.dp_axes:
+            n *= mesh_axis_sizes(self.mesh)[a]
+        return n > 1 and size % n == 0
+
+    def batch_spec(self, batch_size: int) -> P:
+        if self._dp_ok(batch_size):
+            return P(self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0])
+        return P(None)
+
+    # -- parameters ---------------------------------------------------------
+    def param_spec(self, path: str, shape: tuple) -> P:
+        cfg = self.cfg
+        tp_heads = cfg.n_heads % self.tp == 0
+        tp_kv = cfg.n_kv_heads % self.tp == 0
+        r = len(shape)
+
+        def last(on: bool):
+            spec = [None] * r
+            if on and self._ok(shape[-1]):
+                spec[-1] = "model"
+            return P(*spec)
+
+        def second_last(on: bool):
+            spec = [None] * r
+            if on and self._ok(shape[-2]):
+                spec[-2] = "model"
+            return P(*spec)
+
+        name = path.rsplit("/", 1)[-1]
+        if name in ("embed",):
+            return P("model", None) if self._ok(shape[0]) else P(None, None)
+        if name in ("lm_head",):
+            return last(True)
+        if name in ("wq", "bq"):
+            return last(tp_heads)
+        if name in ("wk", "wv", "bk", "bv"):
+            return last(tp_kv)
+        if name == "wo":
+            return second_last(tp_heads)
+        # MLA
+        if name in ("w_uk", "w_uv"):
+            return last(tp_heads)
+        if name == "w_dkv":
+            return P(*([None] * r))
+        # MoE expert banks: (L, E, d, f) / (L, E, f, d); gate replicated
+        if "moe" in path and name in ("w_gate", "w_up", "w_down"):
+            e_dim = r - 3  # E axis position (layers-stacked or not)
+            if cfg.n_routed_experts and shape[e_dim] == cfg.n_routed_experts:
+                if self._ok(cfg.n_routed_experts):
+                    spec = [None] * r
+                    spec[e_dim] = "model"
+                    return P(*spec)  # EP
+                # expert-TP: shard the hidden f dim
+                f_dim = r - 1 if name in ("w_gate", "w_up") else r - 2
+                if self._ok(shape[f_dim]):
+                    spec = [None] * r
+                    spec[f_dim] = "model"
+                    return P(*spec)
+                return P(*([None] * r))
+        if name == "gate":
+            return P(*([None] * r))
+        # dense MLP (also MoE shared experts)
+        if name in ("w_gate", "w_up"):
+            return last(True)
+        if name == "w_down":
+            return second_last(True)
+        # SSM
+        if name in ("in_proj", "w_dt2"):
+            return last(True)
+        if name in ("out_proj", "w_dt1", "a_log", "d_skip", "dt_bias", "conv_w", "w_bc"):
+            # di-indexed: shard the di dim where present
+            spec = [None] * r
+            for i, s in enumerate(shape):
+                di = cfg.ssm_inner or cfg.d_model
+                if s == di and self._ok(s):
+                    spec[i] = "model"
+                    break
+            return P(*spec)
+        # xLSTM
+        if name in ("up", "w_gates"):
+            return last(True)
+        if name in ("wq_x", "wk_x", "wv_x"):
+            return last(True)
+        if name == "down":
+            return second_last(True)
+        if name in ("r_gates", "w_if"):
+            return P(*([None] * r))
+        # norms, biases, everything else: replicated
+        return P(*([None] * r))
+
+    def params_shardings(self, params_shapes) -> Any:
+        def f(path, leaf):
+            return NamedSharding(self.mesh, self.param_spec(_path_str(path), leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+    # -- optimizer state -----------------------------------------------------
+    def opt_shardings(self, params_shapes, zero1: bool = False) -> Any:
+        """Moments follow params; ZeRO-1 additionally shards the first
+        free (unsharded, divisible) dim over ``data``."""
+
+        def f(path, leaf):
+            spec = list(self.param_spec(_path_str(path), leaf.shape))
+            while len(spec) < len(leaf.shape):
+                spec.append(None)
+            if zero1:
+                dsize = mesh_axis_sizes(self.mesh).get("data", 1)
+                for i, s in enumerate(leaf.shape):
+                    if spec[i] is None and dsize > 1 and s % dsize == 0 and s >= dsize:
+                        spec[i] = "data"
+                        break
+            return NamedSharding(self.mesh, P(*spec))
+
+        return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+    # -- batches -------------------------------------------------------------
+    def batch_shardings(self, batch_specs) -> Any:
+        def f(path, leaf):
+            b = leaf.shape[0]
+            spec = [None] * len(leaf.shape)
+            bs = self.batch_spec(b)
+            spec[0] = bs[0] if len(bs) else None
+            return NamedSharding(self.mesh, P(*spec))
+
+        return jax.tree_util.tree_map_with_path(f, batch_specs)
+
+    # -- decode caches ---------------------------------------------------------
+    def cache_shardings(self, cache_shapes, batch: int) -> Any:
+        cfg = self.cfg
+        tp_kv = cfg.n_kv_heads % self.tp == 0 and self.tp > 1
+
+        def f(path, leaf):
+            p = _path_str(path)
+            r = len(leaf.shape)
+            spec = [None] * r
+            name = p.rsplit("/", 1)[-1]
+            # (L, B, ...) stacked caches: B at axis 1; xlstm states (B, ...)
+            b_axis = 1 if r >= 2 and leaf.shape[0] == cfg.n_layers else 0
+            if self._dp_ok(batch) and leaf.shape[b_axis] == batch:
+                spec[b_axis] = self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+            if name in ("k", "v", "cross_k", "cross_v"):  # (L,B,Lc,Hkv,hd)
+                if tp_kv:
+                    spec[3] = "model"
+                elif self._ok(leaf.shape[2]):
+                    spec[2] = "model"  # sequence-sharded decode attention
+            elif name in ("c", "r"):  # MLA latent cache (L,B,Lc,r)
+                if self._ok(leaf.shape[2]):
+                    spec[2] = "model"
+            elif name == "h" and r == 4:  # ssm state (L,B,di,N)
+                if self._ok(leaf.shape[2]):
+                    spec[2] = "model"
+            elif r >= 3:  # xlstm matrix memories etc.
+                for i in range(r - 1, b_axis, -1):
+                    if self._ok(leaf.shape[i]):
+                        spec[i] = "model"
+                        break
+            return NamedSharding(self.mesh, P(*spec))
+
+        return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+    def replicated(self, tree) -> Any:
+        def f(leaf):
+            return NamedSharding(self.mesh, P(*([None] * len(leaf.shape))))
+
+        return jax.tree.map(f, tree)

@@ -1,0 +1,42 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --steps 100 \
+        [--reduced] [--ckpt /path] [--seq-len 128] [--batch 8] [--microbatches 2]
+
+On a pod each host runs this same entrypoint; the data pipeline shards by
+host and the checkpointer is elastic (DESIGN.md §6).
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.optim import adamw
+    from repro.train.loop import train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    res = train(
+        cfg, n_steps=args.steps, ckpt_dir=args.ckpt, seq_len=args.seq_len,
+        global_batch=args.batch, microbatches=args.microbatches,
+        opt_cfg=adamw.AdamWConfig(lr=args.lr, warmup_steps=min(10, args.steps // 5),
+                                  total_steps=args.steps),
+    )
+    print(f"done: {res.steps} steps, final loss {res.losses[-1]:.4f}, "
+          f"stragglers {res.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,373 @@
+"""Attention: GQA with chunked (flash-style) online softmax, MLA, decode.
+
+Design notes (see DESIGN.md §5):
+
+* Training/prefill attention never materializes S×S scores: a static Python
+  loop over query chunks runs a `lax.scan` over exactly the causal prefix of
+  KV chunks (static trip count per q-chunk), so HLO FLOPs ≈ the causal
+  optimum — this keeps `cost_analysis` honest for the roofline — and the
+  working set stays O(chunk²).
+* Sliding-window attention additionally *skips* KV chunks entirely below the
+  window (static bound per q-chunk) — this is what makes hymba's 512k-token
+  shape lowerable.
+* Decode attends one query position against the cache with a length mask.
+* MLA (DeepSeek) keeps the compressed KV (c_kv ‖ k_rope) as the cache and
+  expands per-head K/V on the fly (train) or uses the absorbed form (decode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, maybe_shard, mesh_axis_size, rope_angles
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# chunked causal attention (q: (B,S,H,D), k/v: (B,Skv,Hkv,D))
+# --------------------------------------------------------------------------
+def _attend_block(q, k, v, scale, mask):
+    """One (q-chunk, kv-chunk) block. Returns (scores_max, exp_sum, out)."""
+    # q (B,cq,H,D) k (B,ck,Hkv,D) -> group-broadcast
+    B, cq, H, D = q.shape
+    ck, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, cq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if mask is not None:
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    positions_q=None,
+    positions_kv=None,
+    unroll_prefix: bool = False,
+):
+    """Flash-style attention. Shapes: q (B,S,H,D), k/v (B,Skv,Hkv,D)."""
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]  # value dim may differ (MLA)
+    scale = 1.0 / math.sqrt(D)
+
+    def _pick(size, c):  # largest divisor of `size` not exceeding c
+        c = min(c, size)
+        while size % c:
+            c -= 1
+        return c
+
+    cq = _pick(S, q_chunk)
+    ck = _pick(Skv, kv_chunk)
+    nq, nk = S // cq, Skv // ck
+    g = H // Hkv
+    if positions_q is None:
+        positions_q = jnp.arange(S)
+    if positions_kv is None:
+        positions_kv = jnp.arange(Skv)
+
+    outs = []
+    for qi in range(nq):
+        qs = q[:, qi * cq : (qi + 1) * cq]
+        pos_q = positions_q[qi * cq : (qi + 1) * cq]
+        # static causal prefix: kv chunks 0..hi-1; sliding window skips lo
+        hi = nk if not causal else min(nk, ((qi + 1) * cq + ck - 1) // ck)
+        lo = 0
+        if window is not None and causal:
+            lo = max(0, (qi * cq - window) // ck)
+        n_blocks = hi - lo
+
+        if unroll_prefix:
+            # cost-pass form: ONE statically-sliced prefix block per q chunk
+            # (no lax.scan, so XLA cost_analysis counts every FLOP exactly).
+            ks = k[:, lo * ck : hi * ck]
+            vs = v[:, lo * ck : hi * ck]
+            pos_k = positions_kv[lo * ck : hi * ck]
+            mask = None
+            if causal:
+                mask = pos_q[None, :, None] >= pos_k[None, None, :]
+                if window is not None:
+                    mask &= pos_q[None, :, None] - pos_k[None, None, :] < window
+                mask = jnp.broadcast_to(mask, (B, cq, (hi - lo) * ck))
+            m_b, l_b, o_b = _attend_block(qs, ks, vs, scale, mask)
+            o = o_b / jnp.maximum(l_b[..., None], 1e-30)
+            outs.append(o.reshape(B, cq, H, Dv).astype(q.dtype))
+            continue
+
+        def kv_step(carry, kc):
+            m_run, l_run, o_run = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, kc * ck, ck, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, kc * ck, ck, axis=1)
+            pos_k = jax.lax.dynamic_slice_in_dim(positions_kv, kc * ck, ck, axis=0)
+            mask = None
+            if causal:
+                mask = pos_q[None, :, None] >= pos_k[None, None, :]
+                if window is not None:
+                    mask &= pos_q[None, :, None] - pos_k[None, None, :] < window
+                mask = jnp.broadcast_to(mask, (B, cq, ck))
+            m_b, l_b, o_b = _attend_block(qs, ks, vs, scale, mask)
+            m_new = jnp.maximum(m_run, m_b)
+            a1 = jnp.exp(m_run - m_new)
+            a2 = jnp.exp(m_b - m_new)
+            l_new = l_run * a1 + l_b * a2
+            o_new = o_run * a1[..., None] + o_b * a2[..., None]
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, cq, Hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, cq, Hkv, g), jnp.float32)
+        o0 = jnp.zeros((B, cq, Hkv, g, Dv), jnp.float32)
+        (m_f, l_f, o_f), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0), lo + jnp.arange(n_blocks)
+        )
+        o = o_f / jnp.maximum(l_f[..., None], 1e-30)
+        outs.append(o.reshape(B, cq, H, Dv).astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_attention(q, k_cache, v_cache, n_valid):
+    """One-token decode: q (B,1,H,D) vs cache (B,L,Hkv,D).
+
+    ``n_valid`` (B,) is the number of *written* slots. For ring-buffer
+    (sliding-window) caches, L == window and wrapped slots are all valid —
+    slot order is irrelevant because RoPE was applied at insertion and the
+    softmax is permutation-invariant.
+    """
+    B, _, H, D = q.shape
+    L, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, 1, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(L)[None, :] < n_valid[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# standard GQA block params + apply
+# --------------------------------------------------------------------------
+def init_gqa(key, cfg, kg=None):
+    from .common import KeyGen
+
+    kg = kg or KeyGen(key)
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    p = {
+        "wq": dense_init(kg(), (d, H * hd), dt),
+        "wk": dense_init(kg(), (d, Hkv * hd), dt),
+        "wv": dense_init(kg(), (d, Hkv * hd), dt),
+        "wo": dense_init(kg(), (H * hd, d), dt, scale=1.0 / math.sqrt(2 * cfg.n_layers * H * hd / d) / math.sqrt(d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    return p
+
+
+def gqa_project_qkv(p, x, cfg, positions):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.use_rope:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_attention(p, x, cfg, positions=None, cross_kv=None):
+    """Full-sequence (train/prefill) GQA self-attention, or cross-attention
+    when ``cross_kv`` carries raw encoder states (B, T, d) — projected here
+    with this layer's wk/wv (no RoPE on cross)."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(S)
+    if cross_kv is not None:
+        enc = cross_kv
+        T = enc.shape[1]
+        q = (x @ p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(B, S, H, hd)
+        k = (enc @ p["wk"]).reshape(B, T, Hkv, hd)
+        v = (enc @ p["wv"]).reshape(B, T, Hkv, hd)
+        o = chunked_attention(q, k, v, causal=False,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              unroll_prefix=cfg.attn_unroll)
+        return o.reshape(B, S, -1) @ p["wo"]
+    q, k, v = gqa_project_qkv(p, x, cfg, positions)
+    tp = mesh_axis_size("model")
+    dp = mesh_axis_size("pod") * mesh_axis_size("data")
+    if cfg.n_heads % tp == 0 or tp == 1:
+        q = maybe_shard(q, ("pod", "data"), None, "model", None)
+    elif B % (dp * tp) == 0:
+        # heads don't divide the model axis (smollm 9H, hymba 25H, ...):
+        # instead of replicating the quadratic attention work on every TP
+        # shard, re-shard the BATCH over (dp x model) for the attention
+        # block — a cheap activation all-to-all for a tp-fold compute cut
+        # (§Perf hillclimb #2).
+        all_axes = ("pod", "data", "model")
+        q = maybe_shard(q, all_axes, None, None, None)
+        k = maybe_shard(k, all_axes, None, None, None)
+        v = maybe_shard(v, all_axes, None, None, None)
+    elif S % (tp * cfg.q_chunk) == 0:
+        # batch too small to fold over model (prefill_32k: B=32 < dp*tp):
+        # shard the query SEQUENCE over model instead — context parallelism;
+        # K/V stay batch-sharded (each q-chunk block reads the causal
+        # prefix; XLA gathers the small K/V, 2*S*Hkv*hd per layer).
+        q = maybe_shard(q, ("pod", "data"), "model", None, None)
+    o = chunked_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        positions_q=positions, positions_kv=positions,
+        unroll_prefix=cfg.attn_unroll,
+    )
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_decode(p, x, cfg, cache, layer_cache_name="kv"):
+    """One-token decode. cache dict: {k,v: (B,L,Hkv,hd), len: (B,)}. Returns
+    (out, new_cache)."""
+    B, S, d = x.shape
+    assert S == 1
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache["len"]  # (B,)
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k = (x @ p["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, Hkv, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(1, 1, H, hd)
+        k = k + p["bk"].reshape(1, 1, Hkv, hd)
+        v = v + p["bv"].reshape(1, 1, Hkv, hd)
+    if cfg.use_rope:
+        cos, sin = rope_angles(pos[:, None].astype(jnp.float32), hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    L = cache["k"].shape[1]
+    slot = (pos % L)  # ring buffer (L == window) or plain append (L == max_len)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+    v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+    n_valid = jnp.minimum(pos + 1, L)
+    o = decode_attention(q, k_cache, v_cache, n_valid)
+    out = o.reshape(B, 1, -1) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache, "len": pos + 1}
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# --------------------------------------------------------------------------
+def init_mla(key, cfg):
+    from .common import KeyGen
+
+    kg = KeyGen(key)
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    r = cfg.mla_kv_lora
+    dt = cfg.param_dtype
+    return {
+        "wq": dense_init(kg(), (d, H * (dn + dr)), dt),
+        "w_dkv": dense_init(kg(), (d, r + dr), dt),
+        "kv_norm": jnp.ones((r,), dt),
+        "w_uk": dense_init(kg(), (r, H * dn), dt),
+        "w_uv": dense_init(kg(), (r, H * dv), dt),
+        "wo": dense_init(kg(), (H * dv, d), dt, scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mla_attention(p, x, cfg, positions=None):
+    """Training/prefill MLA: expand per-head K/V from the latent."""
+    from .common import rms_norm
+
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    r = cfg.mla_kv_lora
+    if positions is None:
+        positions = jnp.arange(S)
+    q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = x @ p["w_dkv"]  # (B,S,r+dr)
+    c_kv, k_rope = ckv[..., :r], ckv[..., r:]
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, dn)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, dv)
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # single shared rope head
+    k_rope_b = jnp.broadcast_to(k_rope, (B, S, H, dr))
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    o = chunked_attention(
+        qf, kf, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        positions_q=positions, positions_kv=positions,
+        unroll_prefix=cfg.attn_unroll,
+    )
+    return o.reshape(B, S, H * dv) @ p["wo"]
+
+
+def mla_decode(p, x, cfg, cache):
+    """Absorbed-form decode: cache stores only (c_kv ‖ k_rope) — the MLA win."""
+    from .common import rms_norm
+
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    r = cfg.mla_kv_lora
+    pos = cache["len"]
+    q = (x @ p["wq"]).reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_angles(pos[:, None].astype(jnp.float32), dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    ckv = x @ p["w_dkv"]
+    c_new, kr_new = ckv[..., :r], ckv[..., r:]
+    c_new = rms_norm(c_new, p["kv_norm"])
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, 0, 0]
+    L = cache["c"].shape[1]
+    bidx = jnp.arange(B)
+    slot = pos % L
+    c_cache = cache["c"].at[bidx, slot].set(c_new[:, 0])
+    r_cache = cache["r"].at[bidx, slot].set(kr_new)
+    # absorb W_uk into q: q_lat (B,1,H,r)
+    w_uk = p["w_uk"].reshape(r, H, dn)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    s_lat = jnp.einsum("bshr,blr->bshl", q_lat, c_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,bld->bshl", q_rope.astype(jnp.float32), r_cache.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(dn + dr)
+    s = (s_lat + s_rope) * scale
+    valid = jnp.arange(L)[None, :] < (pos + 1)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bshl,blr->bshr", pattn, c_cache.astype(jnp.float32))  # (B,1,H,r)
+    w_uv = p["w_uv"].reshape(r, H, dv)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(B, 1, H * dv) @ p["wo"]
+    return out, {"c": c_cache, "r": r_cache, "len": pos + 1}

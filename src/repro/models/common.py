@@ -1,0 +1,176 @@
+"""Shared model building blocks: norms, RoPE, init, sharding helpers.
+
+Models are plain pytrees-of-dicts + pure functions (no framework dep —
+only jax/numpy are installed). Parameters are created by ``init_*`` helpers
+and consumed by ``apply``-style functions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# sharding helper: constrain only inside a `logical_mesh(mesh)` context
+# --------------------------------------------------------------------------
+_ACTIVE_MESH = None  # set by logical_mesh()
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def logical_mesh(mesh):
+    """Enter a mesh for both pjit lowering and `maybe_shard` constraints."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def maybe_shard(x, *spec):
+    """with_sharding_constraint that degrades to a no-op outside a mesh.
+
+    ``spec`` entries may be None, an axis name, or a tuple of axis names;
+    axis names missing from the active mesh are dropped.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None or mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+
+    def _filter(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    entries = [_filter(e) for e in spec]
+    # rank-adapt: callers annotate (batch..., feature) — if x has fewer dims
+    # (e.g. flattened tokens), drop leading batch entries; pad with None.
+    if len(entries) > x.ndim:
+        entries = entries[len(entries) - x.ndim :]
+    while len(entries) < x.ndim:
+        entries.append(None)
+    # a mesh axis may appear at most once
+    seen = set()
+    for i, e in enumerate(entries):
+        ax = e if isinstance(e, tuple) else (e,) if e else ()
+        if any(a in seen for a in ax):
+            entries[i] = None
+        seen.update(ax)
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def batch_axes():
+    """Logical batch sharding axes: ('pod','data') when multi-pod."""
+    return ("pod", "data")
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis in the active logical mesh (1 if absent)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None or mesh.empty or name not in mesh.axis_names:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale + bias
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_angles(positions, dim, theta=10000.0):
+    """positions (...,) -> cos,sin of shape (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, D); cos/sin (..., S, D/2) — rotate-half convention."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Split-on-demand PRNG key supplier for nested init code."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: (silu(x@Wg) * (x@Wu)) @ Wd."""
+    g = jax.nn.silu(x @ w_gate)
+    u = x @ w_up
+    return (g * u) @ w_down
+
+
+def cross_entropy_loss(logits, labels, vocab_real: int, ignore_id: int = -100):
+    """Token-mean CE in f32; positions with ignore_id are masked; logits over
+    padded vocab are masked to -inf above ``vocab_real``."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vocab_real < v:
+        pad_mask = jnp.arange(v) >= vocab_real
+        logits = jnp.where(pad_mask, -1e30, logits)
+    valid = labels != ignore_id
+    labels_c = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

@@ -1,0 +1,265 @@
+"""Model facade: init / forward / loss / decode for every assigned arch.
+
+    params = init_params(cfg, key)
+    logits = forward(cfg, params, batch)           # train / prefill
+    loss   = loss_fn(cfg, params, batch)
+    cache  = init_cache(cfg, batch_size, cache_len)
+    logits, cache = decode_step(cfg, params, cache, tokens, frames=...)
+
+`batch` is a dict: tokens (B,S) int32 [+ labels, vision_embeds, frames].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, cross_entropy_loss, dense_init, embed_init, maybe_shard
+from .ffn import moe_aux_loss
+from .transformer import (
+    apply_norm,
+    init_layer_caches,
+    init_norm,
+    init_stacked_layers,
+    stack_decode,
+    stack_forward,
+)
+from .xlstm import init_mlstm, init_slstm, mlstm_forward, slstm_forward
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(cfg, key):
+    kg = KeyGen(key)
+    V, d = cfg.vocab, cfg.d_model
+    p: Dict = {"embed": embed_init(kg(), (V, d), cfg.param_dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kg(), (d, V), cfg.param_dtype, scale=0.02)
+    p["final_norm"] = init_norm(cfg)
+
+    if cfg.family == "ssm":  # xLSTM heterogeneous stack
+        blocks = []
+        for t in cfg.block_types:
+            init = init_mlstm if t == "m" else init_slstm
+            blk = dict(init(kg(), cfg))
+            blk["pre_norm"] = init_norm(cfg)
+            blocks.append(blk)
+        p["blocks"] = blocks
+        return p
+
+    cross = cfg.family == "audio"
+    p["layers"] = init_stacked_layers(kg(), cfg, cross_attn=cross)
+    if cfg.family == "audio":  # whisper encoder (bidirectional, no cross)
+        import dataclasses
+
+        enc_cfg = dataclasses.replace(
+            cfg, hybrid_parallel_ssm=False, n_routed_experts=0, use_rope=False
+        )
+        p["encoder"] = {
+            "layers": init_stacked_layers(kg(), enc_cfg, n_layers=cfg.encoder_layers),
+            "final_norm": init_norm(cfg),
+        }
+    return p
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+def _embed(cfg, p, tokens):
+    x = p["embed"][tokens]  # (B,S,d)
+    return x.astype(cfg.act_dtype)
+
+
+def _head(cfg, p, x):
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = x @ w
+    return maybe_shard(logits, ("pod", "data"), None, "model")
+
+
+def _positions(S):
+    return jnp.arange(S)
+
+
+def _sinusoid(S, d, dtype):
+    pos = jnp.arange(S)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# whisper encoder
+# --------------------------------------------------------------------------
+def _encode_audio(cfg, p, frames):
+    import dataclasses
+
+    enc_cfg = dataclasses.replace(
+        cfg, hybrid_parallel_ssm=False, n_routed_experts=0, use_rope=False,
+        sliding_window=None,
+    )
+    B, T, d = frames.shape
+    x = frames.astype(cfg.act_dtype) + _sinusoid(T, d, cfg.act_dtype)[None]
+    # bidirectional: causal=False via cross_kv trick — self-attention with
+    # full visibility. Reuse gqa_attention's cross path on itself.
+    from .attention import gqa_project_qkv, chunked_attention
+    from .transformer import apply_norm as an, _maybe_remat
+
+    def enc_layer(lp, x):
+        h = an(enc_cfg, lp["attn_norm"], x)
+        q, k, v = gqa_project_qkv(lp["attn"], h, enc_cfg, _positions(T))
+        o = chunked_attention(q, k, v, causal=False,
+                              q_chunk=enc_cfg.q_chunk, kv_chunk=enc_cfg.kv_chunk,
+                              unroll_prefix=enc_cfg.attn_unroll)
+        x = x + o.reshape(B, T, -1) @ lp["attn"]["wo"]
+        h2 = an(enc_cfg, lp["mlp_norm"], x)
+        from .ffn import mlp
+
+        return x + mlp(lp["mlp"], h2, enc_cfg)
+
+    fn = _maybe_remat(enc_cfg, enc_layer)
+
+    if enc_cfg.scan_layers:
+        def body(carry, lp):
+            return fn(lp, carry), None
+
+        x, _ = jax.lax.scan(body, x, p["encoder"]["layers"])
+    else:
+        n = jax.tree.leaves(p["encoder"]["layers"])[0].shape[0]
+        for i in range(n):
+            lp = jax.tree.map(lambda t: t[i], p["encoder"]["layers"])
+            x = fn(lp, x)
+    return apply_norm(cfg, p["encoder"]["final_norm"], x)
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+def forward(cfg, p, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(cfg, p, tokens)
+    x = maybe_shard(x, ("pod", "data"), None, None)
+
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        Np = cfg.vision_patches
+        ve = batch["vision_embeds"].astype(cfg.act_dtype)
+        x = jnp.concatenate([ve, x[:, Np:]], axis=1)  # stub anyres merge
+
+    if cfg.family == "ssm":
+        return _xlstm_forward(cfg, p, x)
+
+    enc_kv = None
+    if cfg.family == "audio":
+        enc_out = _encode_audio(cfg, p, batch["frames"])
+        # project enc K/V once per layer inside the stack via cross params;
+        # pass the encoder output and project with shared decoder-side wk/wv
+        enc_kv = enc_out
+        x = x + _sinusoid(S, cfg.d_model, cfg.act_dtype)[None]
+
+    positions = _positions(S)
+    x = stack_forward(cfg, p["layers"], x, positions, enc_kv=enc_kv)
+    x = apply_norm(cfg, p["final_norm"], x)
+    return _head(cfg, p, x)
+
+
+def loss_fn(cfg, p, batch):
+    logits = forward(cfg, p, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        Np = cfg.vision_patches
+        labels = labels.at[:, :Np].set(-100)  # no loss on image positions
+    loss = cross_entropy_loss(logits, labels, cfg.vocab_real)
+    if cfg.n_routed_experts and cfg.moe_aux_weight:
+        # aux loss on first layer's router as representative (cheap proxy)
+        first = jax.tree.map(lambda t: t[0], p["layers"])
+        x = _embed(cfg, p, batch["tokens"])
+        loss = loss + cfg.moe_aux_weight * moe_aux_loss(first["moe"], x, cfg)
+    return loss
+
+
+# --------------------------------------------------------------------------
+# xLSTM stack
+# --------------------------------------------------------------------------
+def _xlstm_forward(cfg, p, x, states=None):
+    new_states = []
+    for i, blk in enumerate(p["blocks"]):
+        st = None if states is None else states[i]
+        h = apply_norm(cfg, blk["pre_norm"], x)
+        if cfg.block_types[i] == "m":
+            y, ns = mlstm_forward(blk, h, cfg, state=st)
+        else:
+            y, ns = slstm_forward(blk, h, cfg, state=st)
+        x = x + y
+        new_states.append(ns)
+    x = apply_norm(cfg, p["final_norm"], x)
+    logits = _head(cfg, p, x)
+    if states is None:
+        return logits
+    return logits, new_states
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_cache(cfg, batch, cache_len):
+    if cfg.family == "ssm":
+        B = batch
+        states = []
+        for t in cfg.block_types:
+            if t == "m":
+                H = cfg.n_heads
+                hd = 2 * cfg.d_model // H
+                states.append((
+                    jnp.zeros((B, H, hd, hd), jnp.float32),
+                    jnp.zeros((B, H, hd), jnp.float32),
+                    jnp.zeros((B, H), jnp.float32),
+                ))
+            else:
+                z = jnp.zeros((B, cfg.d_model), jnp.float32)
+                states.append((z, z, z, z))
+        return {"states": states, "len": jnp.zeros((batch,), jnp.int32)}
+    return init_layer_caches(cfg, batch, cache_len)
+
+
+def decode_step(cfg, p, cache, tokens, frames=None):
+    """One-token decode. tokens (B,1). Returns (logits (B,1,V), new_cache)."""
+    x = _embed(cfg, p, tokens)
+    if cfg.family == "ssm":
+        logits, states = _xlstm_forward(cfg, p, x, states=cache["states"])
+        return logits, {"states": states, "len": cache["len"] + 1}
+    enc_kv = None
+    if cfg.family == "audio":
+        if "cross_k" not in cache:  # no cached cross K/V: encode per step
+            enc_kv = _encode_audio(cfg, p, frames)
+        # sinusoidal position for the current step
+        pos = cache["kv"]["len"][0]  # (B,) — same for all layers
+        d = cfg.d_model
+        i = jnp.arange(d // 2).astype(jnp.float32)
+        ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)[None]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(x.dtype)
+        x = x + pe[:, None, :]
+    x, new_caches = stack_decode(cfg, p["layers"], x, cache, enc_kv=enc_kv)
+    x = apply_norm(cfg, p["final_norm"], x)
+    return _head(cfg, p, x), new_caches
+
+
+def precompute_cross_kv(cfg, p, cache, frames):
+    """Enc-dec serving: run the encoder ONCE per request and project every
+    decoder layer's cross K/V into the cache (whisper §Perf fix)."""
+    enc = _encode_audio(cfg, p, frames)
+    B, T, d = enc.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def proj(lp):
+        k = (enc @ lp["cross"]["wk"]).reshape(B, T, Hkv, hd)
+        v = (enc @ lp["cross"]["wv"]).reshape(B, T, Hkv, hd)
+        return k, v
+
+    ks, vs = jax.vmap(proj)(p["layers"])  # (L, B, T, Hkv, hd)
+    cache = dict(cache)
+    cache["cross_k"] = ks.astype(cfg.act_dtype)
+    cache["cross_v"] = vs.astype(cfg.act_dtype)
+    return cache

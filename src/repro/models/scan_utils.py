@@ -1,0 +1,38 @@
+"""Chunked-remat time scan for recurrent blocks (mamba / mLSTM / sLSTM).
+
+A plain `lax.scan` over T timesteps saves every step's carry for the
+backward pass — for mLSTM that is (T, B, H, hd, hd) f32, which is what blew
+the 16 GiB budget on xlstm train_4k (EXPERIMENTS.md §4.8). Scanning over
+T/chunk *chunks* with a rematerialized inner scan stores one carry per
+chunk and recomputes inside the chunk: memory ÷ chunk, compute × ~2 on the
+recurrence only — the classic sequence-dim gradient checkpoint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chunked_remat_scan(step, init, xs, chunk: int = 128):
+    """Equivalent to ``lax.scan(step, init, xs)`` with chunked remat.
+
+    xs: pytree with leading time axis T (equal across leaves). Falls back
+    to a plain scan when T <= chunk or T % divisor behavior would pad.
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    if c <= 1 or c == T:
+        return lax.scan(step, init, xs)
+    n = T // c
+
+    def chunk_body(carry, xs_chunk):
+        return lax.scan(step, carry, xs_chunk)
+
+    chunk_body = jax.checkpoint(chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs_r = jax.tree.map(lambda t: t.reshape(n, c, *t.shape[1:]), xs)
+    carry, ys = lax.scan(chunk_body, init, xs_r)
+    ys = jax.tree.map(lambda t: t.reshape(T, *t.shape[2:]), ys)
+    return carry, ys

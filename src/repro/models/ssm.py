@@ -1,0 +1,120 @@
+"""Selective SSM (Mamba-style) branch — used by hymba's parallel heads.
+
+Diagonal selective state space: per channel c and state dim n,
+
+    h_t = exp(dt_t * A) ⊙ h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t · h_t + D ⊙ x_t
+
+with input-dependent (selective) dt, B, C. The recurrence runs as a
+`lax.scan` over time (O(1) state per step — this is what makes the 512k
+decode shape lowerable); decode is a single step.
+
+Simplifications vs the Mamba reference (recorded in DESIGN.md §8): the
+depthwise causal conv is kept (kernel 4) but implemented as shifted adds;
+no complex-mode A; dt via softplus with low-rank projection.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, dense_init
+
+
+def init_ssm(key, cfg):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    di = cfg.ssm_inner or d
+    N = cfg.ssm_state
+    dtr = max(d // 16, 1)
+    dt = cfg.param_dtype
+    return {
+        "in_proj": dense_init(kg(), (d, di), dt),
+        "conv_w": dense_init(kg(), (4, di), dt, scale=0.5),  # depthwise, k=4
+        "a_log": jnp.log(
+            jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+        ),  # (di, N), f32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_bc": dense_init(kg(), (di, 2 * N), dt),
+        "w_dt1": dense_init(kg(), (di, dtr), dt),
+        "w_dt2": dense_init(kg(), (dtr, di), dt),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(kg(), (di, d), dt, scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv4(u, w, state=None):
+    """Depthwise causal conv, kernel 4, via shifted adds.
+    u: (B,S,di), w: (4,di). Returns (y, new_state (B,3,di))."""
+    if state is None:
+        state = jnp.zeros((u.shape[0], 3, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)  # (B, S+3, di)
+    y = (
+        ext[:, 0:-3] * w[0]
+        + ext[:, 1:-2] * w[1]
+        + ext[:, 2:-1] * w[2]
+        + ext[:, 3:] * w[3]
+    )
+    new_state = ext[:, -3:]
+    return y, new_state
+
+
+def _ssm_scan(u, dt_, B_, C_, a, h0):
+    """u,dt_: (B,S,di); B_,C_: (B,S,N); a: (di,N) negative; h0: (B,di,N)."""
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp  # (B,di),(B,di),(B,N),(B,N)
+        decay = jnp.exp(dt_t[..., None] * a[None])  # (B,di,N)
+        h = h * decay + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(u, 1, 0),
+        jnp.moveaxis(dt_, 1, 0),
+        jnp.moveaxis(B_, 1, 0),
+        jnp.moveaxis(C_, 1, 0),
+    )
+    from .scan_utils import chunked_remat_scan
+
+    h, ys = chunked_remat_scan(step, h0, xs)
+    return h, jnp.moveaxis(ys, 0, 1)  # (B,S,di)
+
+
+def ssm_forward(p, x, cfg, state=None):
+    """x: (B,S,d). Returns (y (B,S,d), new_state dict)."""
+    B, S, d = x.shape
+    di = cfg.ssm_inner or d
+    N = cfg.ssm_state
+    u = x @ p["in_proj"]  # (B,S,di)
+    conv_state = None if state is None else state["conv"]
+    u, conv_state = _causal_conv4(u, p["conv_w"], conv_state)
+    u = jax.nn.silu(u)
+    bc = (u @ p["w_bc"]).astype(jnp.float32)
+    B_, C_ = bc[..., :N], bc[..., N:]
+    dt_ = jax.nn.softplus(
+        ((u @ p["w_dt1"]) @ p["w_dt2"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    a = -jnp.exp(p["a_log"])  # (di,N), negative => stable decay
+    h0 = (
+        jnp.zeros((B, di, N), jnp.float32) if state is None else state["h"]
+    )
+    h, y = _ssm_scan(u.astype(jnp.float32), dt_, B_, C_, a, h0)
+    y = y + u.astype(jnp.float32) * p["d_skip"]
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"h": h, "conv": conv_state}
+
+
+def ssm_decode(p, x, cfg, state):
+    """Single-token step; state: {'h': (B,di,N) f32, 'conv': (B,3,di)}."""
+    return ssm_forward(p, x, cfg, state=state)
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    di = cfg.ssm_inner or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), cfg.param_dtype),
+    }

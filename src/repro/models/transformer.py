@@ -1,0 +1,238 @@
+"""Generic decoder/encoder stacks covering 9 of the 10 assigned archs
+(xLSTM has its own heterogeneous stack in model.py).
+
+One layer =  [norm -> attention (GQA or MLA) (‖ mamba branch for hymba)] +
+             [norm -> MLP or MoE]           with residuals.
+
+Layers are stacked on a leading L axis and driven by `lax.scan` (keeps the
+512-device dry-run HLO small and compile times sane) with a configurable
+remat policy. Whisper builds an encoder stack (bidirectional) and a decoder
+stack with interleaved cross-attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    gqa_attention,
+    gqa_decode,
+    init_gqa,
+    init_mla,
+    mla_attention,
+    mla_decode,
+    chunked_attention,
+)
+from .common import KeyGen, dense_init, layer_norm, maybe_shard, rms_norm
+from .ffn import init_mlp, init_moe, mlp, moe_ffn
+from .ssm import init_ssm, init_ssm_state, ssm_forward
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.param_dtype)
+    return p
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# --------------------------------------------------------------------------
+# layer init
+# --------------------------------------------------------------------------
+def init_layer(key, cfg, cross_attn: bool = False):
+    kg = KeyGen(key)
+    p = {"attn_norm": init_norm(cfg), "mlp_norm": init_norm(cfg)}
+    if cfg.attention == "mla":
+        p["attn"] = init_mla(kg(), cfg)
+    else:
+        p["attn"] = init_gqa(kg(), cfg)
+    if cross_attn:
+        p["cross_norm"] = init_norm(cfg)
+        p["cross"] = init_gqa(kg(), cfg)
+    if cfg.hybrid_parallel_ssm:
+        p["ssm"] = init_ssm(kg(), cfg)
+        p["ssm_norm"] = init_norm(cfg)
+    if cfg.n_routed_experts:
+        p["moe"] = init_moe(kg(), cfg)
+    elif cfg.d_ff:
+        p["mlp"] = init_mlp(kg(), cfg)
+    return p
+
+
+def init_stacked_layers(key, cfg, n_layers=None, cross_attn=False):
+    """Stack per-layer params on a leading axis (for lax.scan)."""
+    n = n_layers or cfg.n_layers
+    keys = jax.random.split(key, n)
+    leaves = [init_layer(k, cfg, cross_attn=cross_attn) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+
+# --------------------------------------------------------------------------
+# layer apply (full-sequence)
+# --------------------------------------------------------------------------
+def layer_forward(cfg, lp, x, positions, enc_kv=None):
+    h = apply_norm(cfg, lp["attn_norm"], x)
+    if cfg.attention == "mla":
+        attn_out = mla_attention(lp["attn"], h, cfg, positions)
+    else:
+        attn_out = gqa_attention(lp["attn"], h, cfg, positions)
+    if cfg.hybrid_parallel_ssm:
+        hs = apply_norm(cfg, lp["ssm_norm"], x)
+        ssm_out, _ = ssm_forward(lp["ssm"], hs, cfg)
+        attn_out = (attn_out + ssm_out) * 0.5  # hymba parallel heads, mean fuse
+    x = x + attn_out
+    if enc_kv is not None:
+        hc = apply_norm(cfg, lp["cross_norm"], x)
+        x = x + gqa_attention(lp["cross"], hc, cfg, cross_kv=enc_kv)
+    h2 = apply_norm(cfg, lp["mlp_norm"], x)
+    if cfg.n_routed_experts:
+        y = moe_ffn(lp["moe"], h2, cfg)
+    elif cfg.d_ff:
+        y = mlp(lp["mlp"], h2, cfg)
+    else:
+        y = 0.0
+    return x + y
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def stack_forward(cfg, layers, x, positions, enc_kv=None):
+    """Run the layer stack (scan when homogeneous)."""
+    fn = _maybe_remat(cfg, functools.partial(layer_forward, cfg))
+    if cfg.scan_layers:
+        def body(carry, lp):
+            return fn(lp, carry, positions, enc_kv), None
+
+        x, _ = jax.lax.scan(body, x, layers)
+        return x
+    n = jax.tree.leaves(layers)[0].shape[0]
+    for i in range(n):
+        lp = jax.tree.map(lambda t: t[i], layers)
+        x = fn(lp, x, positions, enc_kv)
+    return x
+
+
+# --------------------------------------------------------------------------
+# layer apply (single-token decode, KV cache carried per layer)
+# --------------------------------------------------------------------------
+def layer_decode(cfg, lp, x, cache, enc_kv=None):
+    h = apply_norm(cfg, lp["attn_norm"], x)
+    if cfg.attention == "mla":
+        attn_out, kv = mla_decode(lp["attn"], h, cfg, cache["kv"])
+    else:
+        attn_out, kv = gqa_decode(lp["attn"], h, cfg, cache["kv"])
+    new_cache = {"kv": kv}
+    if cfg.hybrid_parallel_ssm:
+        hs = apply_norm(cfg, lp["ssm_norm"], x)
+        ssm_out, sst = ssm_forward(lp["ssm"], hs, cfg, state=cache["ssm"])
+        attn_out = (attn_out + ssm_out) * 0.5
+        new_cache["ssm"] = sst
+    x = x + attn_out
+    if "cross_k" in cache:  # enc-dec: pre-projected cross K/V, cached once
+        from .attention import decode_attention
+
+        B = x.shape[0]
+        H, hd = cfg.n_heads, cfg.head_dim
+        hc = apply_norm(cfg, lp["cross_norm"], x)
+        q = (hc @ lp["cross"]["wq"]).reshape(B, 1, H, hd)
+        T = cache["cross_k"].shape[1]
+        o = decode_attention(q, cache["cross_k"], cache["cross_v"],
+                             jnp.full((B,), T, jnp.int32))
+        x = x + o.reshape(B, 1, -1) @ lp["cross"]["wo"]
+        new_cache["cross_k"] = cache["cross_k"]
+        new_cache["cross_v"] = cache["cross_v"]
+    elif enc_kv is not None:
+        hc = apply_norm(cfg, lp["cross_norm"], x)
+        x = x + gqa_attention(lp["cross"], hc, cfg, cross_kv=enc_kv)
+    h2 = apply_norm(cfg, lp["mlp_norm"], x)
+    if cfg.n_routed_experts:
+        y = moe_ffn(lp["moe"], h2, cfg)
+    elif cfg.d_ff:
+        y = mlp(lp["mlp"], h2, cfg)
+    else:
+        y = 0.0
+    return x + y, new_cache
+
+
+def stack_decode(cfg, layers, x, caches, enc_kv=None):
+    if cfg.scan_layers:
+        def body(carry, layer_and_cache):
+            lp, c = layer_and_cache
+            out, nc = layer_decode(cfg, lp, carry, c, enc_kv)
+            return out, nc
+
+        x, new_caches = jax.lax.scan(body, x, (layers, caches))
+        return x, new_caches
+    n = jax.tree.leaves(layers)[0].shape[0]
+    new_list = []
+    for i in range(n):
+        lp = jax.tree.map(lambda t: t[i], layers)
+        c = jax.tree.map(lambda t: t[i], caches)
+        x, nc = layer_decode(cfg, lp, x, c, enc_kv)
+        new_list.append(nc)
+    new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    return x, new_caches
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+def init_layer_caches(cfg, batch, cache_len, n_layers=None, with_cross=None):
+    """Stacked (L-leading) decode caches for the layer stack.
+
+    For enc-dec models (``with_cross`` defaults on for family=='audio'),
+    the cache carries the per-layer projected cross-attention K/V so the
+    encoder runs ONCE per request, not once per token (§Perf whisper fix):
+    fill via :func:`repro.models.model.precompute_cross_kv`.
+    """
+    L = n_layers or cfg.n_layers
+    dt = cfg.act_dtype
+    if with_cross is None:
+        with_cross = cfg.family == "audio"
+    if cfg.attention == "mla":
+        kv = {
+            "c": jnp.zeros((L, batch, cache_len, cfg.mla_kv_lora), dt),
+            "r": jnp.zeros((L, batch, cache_len, cfg.mla_rope_dim), dt),
+            "len": jnp.zeros((L, batch), jnp.int32),
+        }
+    else:
+        kv = {
+            "k": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, cfg.head_dim), dt),
+            "len": jnp.zeros((L, batch), jnp.int32),
+        }
+    caches = {"kv": kv}
+    if cfg.hybrid_parallel_ssm:
+        di = cfg.ssm_inner or cfg.d_model
+        caches["ssm"] = {
+            "h": jnp.zeros((L, batch, di, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((L, batch, 3, di), cfg.param_dtype),
+        }
+    if with_cross and cfg.encoder_seq:
+        caches["cross_k"] = jnp.zeros(
+            (L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), dt
+        )
+        caches["cross_v"] = jnp.zeros(
+            (L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), dt
+        )
+    return caches

@@ -1,0 +1,81 @@
+"""AdamW with cosine schedule, global-norm clipping — pure-function style.
+
+State is a pytree {mu, nu, count}; moments live in f32 regardless of param
+dtype (bf16-safe). ZeRO-1 sharding of mu/nu is applied at the jit boundary
+by ``ShardingRules.opt_shardings`` — the math here is layout-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(c: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - c.warmup_steps) / jnp.maximum(c.total_steps - c.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * warm * (c.min_lr_frac + (1 - c.min_lr_frac) * cos)
+
+
+def init(params):
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def update(c: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(c, count)
+    b1, b2 = c.beta1, c.beta2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "count": count}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,79 @@
+"""Training loop: data -> step -> metrics -> checkpoint, with fault hooks.
+
+This is the driver `examples/train_smollm.py` and `launch/train.py` use on
+CPU/small meshes; the same loop body is what a pod launcher would run per
+host (the data pipeline and checkpointer are already host-sharded/elastic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
+from ..data.pipeline import SyntheticLM
+from ..models import model as M
+from ..optim import adamw
+from ..runtime.fault import StragglerMonitor
+from .step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    restored_from: Optional[int]
+    straggler_steps: int
+
+
+def train(
+    cfg,
+    n_steps: int = 50,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+    ckpt_dir: Optional[str] = None,
+    save_every: int = 20,
+    seed: int = 0,
+    log_every: int = 10,
+    seq_len: int = 128,
+    global_batch: int = 8,
+    microbatches: int = 1,
+) -> TrainResult:
+    opt_cfg = opt_cfg or adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=n_steps)
+    data = SyntheticLM(cfg.vocab_real, seq_len, global_batch)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = adamw.init(params)
+    start = 0
+    restored = None
+    ck = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        (params, opt_state), manifest = restore(
+            ckpt_dir, None, (params, opt_state)
+        )
+        start = manifest["step"]
+        restored = start
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, microbatches=microbatches),
+                      donate_argnums=(0, 1))
+    losses = []
+    monitor = StragglerMonitor()
+    for step in range(start, n_steps):
+        batch = data.batch_at(step)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        monitor.observe(time.perf_counter() - t0)
+        losses.append(loss)
+        if log_every and (step % log_every == 0 or step == n_steps - 1):
+            print(f"step {step:5d}  loss {loss:.4f}  lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+        if ck and ((step + 1) % save_every == 0 or step + 1 == n_steps):
+            ck.save_async(step + 1, (params, opt_state))
+    if ck:
+        ck.wait()
+    return TrainResult(
+        losses=losses, steps=n_steps - start, restored_from=restored,
+        straggler_steps=monitor.slow_steps,
+    )

@@ -1,0 +1,87 @@
+"""train_step / serve_step factories — the functions the dry-run lowers.
+
+``make_train_step`` closes over config + optimizer config and returns
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+with optional gradient-accumulation microbatching (a `lax.scan` over
+microbatch slices — the standard way to trade HBM for steps) and optional
+error-feedback gradient compression applied before the (implicit, XLA-
+inserted) data-parallel all-reduce.
+
+``make_serve_step`` returns one greedy decode step:
+
+    serve_step(params, cache, tokens[, frames]) -> (next_tokens, logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..optim import adamw
+from ..optim.compression import ef_compress_tree
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, microbatches: int = 1,
+                    compress_grads: bool = False):
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def mb_slice(b, i):
+                return jax.tree.map(
+                    lambda t: jax.lax.dynamic_slice_in_dim(
+                        t, i * (t.shape[0] // microbatches), t.shape[0] // microbatches, 0
+                    ),
+                    b,
+                )
+
+            def acc_body(carry, i):
+                gsum, lsum = carry
+                mb = mb_slice(batch, i)
+                loss, g = jax.value_and_grad(loss_of)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.float32(0)), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        if compress_grads:
+            grads, err = ef_compress_tree(grads)  # stateless demo form
+        params, opt_state, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, tokens, frames=None):
+        logits, cache = M.decode_step(cfg, params, cache, tokens, frames=frames)
+        next_tok = jnp.argmax(
+            logits[..., : cfg.vocab_real], axis=-1
+        ).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    """Forward-only lowering used for the prefill_* shapes."""
+
+    def prefill_step(params, batch):
+        logits = M.forward(cfg, params, batch)
+        # return only the last position's logits (what serving needs)
+        return logits[:, -1, :]
+
+    return prefill_step

@@ -1,0 +1,78 @@
+"""Subprocess body: miniature dry-run — reduced configs, (2,4) host mesh.
+
+Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       python tests/dryrun_small_check.py <arch> <kind>
+kind: train | decode | prefill
+Exits 0 on successful lower+compile with finite cost analysis.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    arch, kind = sys.argv[1], sys.argv[2]
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.sharding import ShardingRules
+    from repro.models import model as M
+    from repro.models.common import logical_mesh
+    from repro.optim import adamw
+    from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, q_chunk=16, kv_chunk=16)
+    mesh = make_host_mesh(2, 4)
+    rules = ShardingRules(cfg, mesh)
+    B, S = 4, 64
+
+    params_shapes = jax.eval_shape(lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+    p_shard = rules.params_shardings(params_shapes)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct((B, cfg.vision_patches, cfg.d_model), cfg.act_dtype)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), cfg.act_dtype)
+    b_shard = rules.batch_shardings(batch)
+
+    with logical_mesh(mesh):
+        if kind == "train":
+            opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+            o_shard = rules.opt_shardings(opt_shapes, zero1=True)
+            step = make_train_step(cfg, adamw.AdamWConfig())
+            lowered = jax.jit(
+                step, in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None), donate_argnums=(0, 1),
+            ).lower(params_shapes, opt_shapes, batch)
+        elif kind == "prefill":
+            lowered = jax.jit(
+                make_prefill_step(cfg), in_shardings=(p_shard, b_shard)
+            ).lower(params_shapes, batch)
+        else:
+            cache_shapes = jax.eval_shape(lambda: M.init_cache(cfg, B, 32))
+            c_shard = rules.cache_shardings(cache_shapes, B)
+            step = make_serve_step(cfg)
+            in_sh = [p_shard, c_shard, b_shard["tokens"]]
+            args = [params_shapes, cache_shapes, jax.ShapeDtypeStruct((B, 1), jnp.int32)]
+            if cfg.family == "audio":
+                in_sh.append(b_shard["frames"])
+                args.append(batch["frames"])
+            lowered = jax.jit(
+                step, in_shardings=tuple(in_sh), out_shardings=(None, None, c_shard),
+            ).lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    assert ca.get("flops", 0) > 0, ca
+    print(f"OK {arch} {kind}: flops/dev={ca['flops']:.3g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""BILU(k) — the MXU tile adaptation: LU property + preconditioner quality."""
+import numpy as np
+import pytest
+
+from repro.core import CSRMatrix, matgen, poisson_2d
+from repro.core.bilu import bilu, bilu_scalar_pattern, tile_adjacency
+
+
+def test_tile_adjacency():
+    a = matgen(40, density=0.1, seed=0)
+    adj = tile_adjacency(a, bs=8)
+    assert adj.n == 5
+    assert adj.has_full_diagonal()
+    dense = a.to_dense()
+    adj_d = adj.to_dense()
+    for i in range(5):
+        for j in range(5):
+            blk = dense[i * 8 : (i + 1) * 8, j * 8 : (j + 1) * 8]
+            if np.any(blk) and i != j:
+                assert adj_d[i, j] == 1.0
+
+
+def test_bilu_full_pattern_is_exact_lu():
+    """Dense tile pattern (k=n_tiles) -> exact no-pivot LU."""
+    rng = np.random.default_rng(1)
+    n = 32
+    d = rng.standard_normal((n, n)).astype(np.float32)
+    d += np.diag(np.abs(d).sum(1) + 1).astype(np.float32)
+    a = CSRMatrix.from_dense(d)
+    fact = bilu(a, k=8, bs=8)
+    L, U = fact.to_dense_lu()
+    np.testing.assert_allclose(L @ U, d, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("k", [0, 1])
+def test_bilu_lu_property_on_tile_pattern(k):
+    """(L@U)_ij == a_ij on every kept scalar position (ILU defining property)."""
+    a = matgen(64, density=0.06, seed=2)
+    fact = bilu(a, k=k, bs=16)
+    L, U = fact.to_dense_lu()
+    mask = bilu_scalar_pattern(fact)
+    diff = np.abs(L @ U - a.to_dense())[mask]
+    assert diff.max() < 5e-4, diff.max()
+
+
+def test_bilu_supersets_scalar_ilu():
+    """BILU(k) keeps every scalar ILU(k) position (it is >= as strong)."""
+    from repro.core import symbolic_ilu_k
+
+    a = matgen(48, density=0.08, seed=3)
+    fact = bilu(a, k=1, bs=8)
+    mask = bilu_scalar_pattern(fact)
+    pat = symbolic_ilu_k(a, 1)
+    for j in range(a.n):
+        cols, _ = pat.row(j)
+        assert mask[j, cols].all()
+
+
+def test_bilu_preconditions_cg():
+    """BILU-preconditioned CG beats unpreconditioned CG on Poisson."""
+    import jax.numpy as jnp
+    import scipy.sparse.linalg as spla
+
+    from repro.core.solvers import cg, csr_to_ell_arrays, make_ell_matvec
+
+    a = poisson_2d(12)
+    fact = bilu(a, k=0, bs=16)
+    L, U = fact.to_dense_lu()
+    import scipy.linalg as sla
+
+    def precond(r):
+        y = sla.solve_triangular(L, np.asarray(r, np.float64), lower=True, unit_diagonal=True)
+        return jnp.asarray(sla.solve_triangular(U, y, lower=False), jnp.float32)
+
+    cols, vals = csr_to_ell_arrays(a)
+    mv = make_ell_matvec(cols, vals, a.n)
+    b = np.ones(a.n, np.float32)
+    # host preconditioner -> run the solver loop in python mode via maxiter steps
+    plain = cg(mv, b, None, tol=1e-6, maxiter=800)
+    # jax while_loop can't call back to scipy; do a python-side PCG here
+    x = np.zeros(a.n, np.float32)
+    r = b.copy()
+    z = np.asarray(precond(r))
+    p = z.copy()
+    it = 0
+    bnorm = np.linalg.norm(b)
+    while np.linalg.norm(r) > 1e-6 * bnorm and it < 800:
+        ap = np.asarray(mv(jnp.asarray(p)))
+        rz = r @ z
+        alpha = rz / (p @ ap)
+        x += alpha * p
+        r -= alpha * ap
+        z = np.asarray(precond(r))
+        beta = (r @ z) / rz
+        p = z + beta * p
+        it += 1
+    assert np.linalg.norm(r) <= 1e-6 * bnorm * 1.1
+    assert it < plain.iterations, (it, plain.iterations)

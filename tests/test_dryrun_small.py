@@ -1,0 +1,34 @@
+"""Miniature dry-run in subprocesses: the sharding rules must lower+compile
+reduced configs of every family on a (2,4) mesh. (The full 512-device
+production dry-run is exercised by `python -m repro.launch.dryrun --all`;
+its 40-cell results live in experiments/dryrun/ and EXPERIMENTS.md.)"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "dryrun_small_check.py")
+
+CASES = [
+    ("smollm-135m", "train"),        # dense, replicated-attention path
+    ("deepseek-v2-lite-16b", "train"),  # MLA + MoE(EP)
+    ("qwen2-moe-a2.7b", "decode"),   # MoE expert padding + GQA decode
+    ("hymba-1.5b", "decode"),        # hybrid attn+ssm, ring-buffer cache
+    ("xlstm-125m", "train"),         # recurrent stack
+    ("whisper-tiny", "decode"),      # enc-dec with cross-attention
+    ("llava-next-mistral-7b", "prefill"),  # vlm stub merge
+    ("starcoder2-15b", "prefill"),   # GQA kv<tp
+]
+
+
+@pytest.mark.parametrize("arch,kind", CASES)
+def test_small_dryrun(arch, kind):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    res = subprocess.run(
+        [sys.executable, SCRIPT, arch, kind],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert res.returncode == 0, f"stdout:{res.stdout}\nstderr:{res.stderr[-1500:]}"
+    assert "OK" in res.stdout

@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.planner import COL_SENTINEL
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+RNG = np.random.default_rng(0)
+
+
+def _tri_upper(bs, dtype):
+    # diagonally dominant: random triangular matrices are exponentially
+    # ill-conditioned, which would make the sweep test meaningless
+    u = np.triu(RNG.standard_normal((bs, bs)).astype(dtype))
+    np.fill_diagonal(u, np.abs(u).sum(1) + 1.0)
+    return u
+
+
+def _tri_unit_lower(bs, dtype):
+    l = np.tril(RNG.standard_normal((bs, bs)).astype(dtype), -1)
+    l /= np.maximum(np.abs(l).sum(1, keepdims=True), 1.0) * 1.5
+    np.fill_diagonal(l, 1.0)
+    return l
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,n,k", [(8, 8, 8), (64, 64, 32), (128, 256, 128), (96, 40, 72), (256, 128, 256)])
+def test_panel_update_sweep(m, n, k, dtype):
+    a = RNG.standard_normal((m, k)).astype(np.float32)
+    b = RNG.standard_normal((k, n)).astype(np.float32)
+    c = RNG.standard_normal((m, n)).astype(np.float32)
+    a, b, c = (jnp.asarray(x, dtype) for x in (a, b, c))
+    got = ops.panel_update(c, a, b, bm=64, bn=64, bk=32)
+    want = ref.panel_update_ref(c, a, b)
+    # blocked-k accumulation reorders the f32 sum; tolerance scales with k
+    rtol, atol = (2e-3, 2e-4) if dtype == np.float32 else (5e-2, 1.0)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=rtol, atol=atol
+    )
+
+
+@pytest.mark.parametrize("bs", [8, 32, 128])
+@pytest.mark.parametrize("m", [8, 64, 200])
+def test_trsm_right_upper_sweep(bs, m):
+    a = RNG.standard_normal((m, bs)).astype(np.float32)
+    u = _tri_upper(bs, np.float32)
+    got = np.asarray(ops.trsm_right_upper(jnp.asarray(a), jnp.asarray(u), bm=64))
+    want = np.asarray(ref.trsm_right_upper_ref(jnp.asarray(a), jnp.asarray(u)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # X @ U == A
+    np.testing.assert_allclose(got @ u, a, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("bs", [8, 32, 128])
+@pytest.mark.parametrize("n", [8, 64, 200])
+def test_trsm_left_unit_lower_sweep(bs, n):
+    a = RNG.standard_normal((bs, n)).astype(np.float32)
+    l = _tri_unit_lower(bs, np.float32)
+    got = np.asarray(ops.trsm_left_unit_lower(jnp.asarray(l), jnp.asarray(a), bn=64))
+    want = np.asarray(ref.trsm_left_unit_lower_ref(jnp.asarray(l), jnp.asarray(a)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(l @ got, a, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("n,w", [(16, 4), (128, 9), (500, 17), (1024, 33)])
+def test_spmv_ell_sweep(n, w):
+    cols = np.full((n, w), COL_SENTINEL, np.int32)
+    vals = np.zeros((n, w), np.float32)
+    for j in range(n):
+        m = RNG.integers(1, w + 1)
+        c = np.sort(RNG.choice(n, size=m, replace=False)).astype(np.int32)
+        cols[j, :m] = c
+        vals[j, :m] = RNG.standard_normal(m)
+    x = RNG.standard_normal(n).astype(np.float32)
+    got = np.asarray(ops.spmv_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x), bm=64))
+    want = np.asarray(ref.spmv_ell_ref(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_matches_csr():
+    """Against scipy CSR matvec on a real matrix."""
+    from repro.core import matgen
+    from repro.core.solvers import csr_to_ell_arrays
+
+    a = matgen(96, density=0.08, seed=1)
+    cols, vals = csr_to_ell_arrays(a)
+    x = RNG.standard_normal(a.n).astype(np.float32)
+    got = np.asarray(ops.spmv_ell(cols, vals, jnp.asarray(x)))
+    want = a.to_scipy() @ x
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

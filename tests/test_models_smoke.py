@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU, asserting shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+
+
+def _batch(cfg, B=2, S=64, key=0):
+    rng = np.random.default_rng(key)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_real, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_real, (B, S)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_patches, cfg.d_model)) * 0.02, cfg.act_dtype
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)) * 0.02, cfg.act_dtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = jax.jit(lambda p, b: M.forward(cfg, p, b))(params, batch)
+    assert logits.shape == (2, 64, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
+    loss = jax.jit(lambda p, b: M.loss_fn(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss))
+    # random init ~ uniform over the real vocab
+    assert float(loss) < np.log(cfg.vocab_real) + 2.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_grads_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, key=1)
+
+    @jax.jit
+    def step(p, b):
+        loss, grads = jax.value_and_grad(lambda q: M.loss_fn(cfg, q, b))(p)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        return loss, gnorm
+
+    loss, gnorm = step(params, batch)
+    assert np.isfinite(float(loss)) and np.isfinite(float(gnorm))
+    assert float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    B = 2
+    cache = M.init_cache(cfg, B, cache_len=32)
+    rng = np.random.default_rng(2)
+    frames = None
+    if cfg.family == "audio":
+        frames = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)) * 0.02, cfg.act_dtype
+        )
+
+    def step(p, c, t):
+        return M.decode_step(cfg, p, c, t, frames=frames)
+
+    jstep = jax.jit(step)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_real, (B, 1)), jnp.int32)
+    for it in range(3):
+        logits, cache = jstep(params, cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits[:, :, : cfg.vocab_real], axis=-1).astype(jnp.int32)
+
+
+def test_exact_configs_match_assignment():
+    """Spot-check the published numbers (full configs, no instantiation)."""
+    c = get_config("deepseek-v2-lite-16b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_real) == (27, 2048, 16, 102400)
+    assert (c.n_routed_experts, c.moe_top_k, c.n_shared_experts, c.mla_kv_lora) == (64, 6, 2, 512)
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.n_routed_experts, c.moe_top_k, c.n_shared_experts, c.d_expert) == (60, 4, 4, 1408)
+    c = get_config("starcoder2-15b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == (40, 6144, 48, 4, 24576)
+    c = get_config("stablelm-12b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_real) == (
+        40, 5120, 32, 8, 13824, 100352,
+    )
+    c = get_config("smollm-135m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (30, 576, 9, 3)
+    p = c.param_count()
+    assert 1.0e8 < p["total"] < 1.8e8  # ~135M
+    c = get_config("hymba-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.ssm_state) == (32, 1600, 25, 16)
+    c = get_config("whisper-tiny")
+    assert (c.n_layers, c.d_model, c.encoder_seq) == (4, 384, 1500)
+    c = get_config("xlstm-125m")
+    assert (c.n_layers, c.d_model, c.d_ff) == (12, 768, 0)
+    assert len(c.block_types) == 12

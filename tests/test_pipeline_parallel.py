@@ -1,0 +1,18 @@
+"""Pipeline parallelism: GPipe schedule must match the sequential stack
+exactly, forward and backward (subprocess with 4 simulated devices)."""
+import os
+import subprocess
+import sys
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "pipeline_check.py")
+
+
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    res = subprocess.run(
+        [sys.executable, SCRIPT], env=env, capture_output=True, text=True,
+        timeout=900,
+    )
+    assert res.returncode == 0, f"stdout:{res.stdout}\nstderr:{res.stderr[-2000:]}"
+    assert "PIPELINE OK" in res.stdout

@@ -1,0 +1,69 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import matgen, numeric_ilu_ref, pilu1_symbolic, symbolic_ilu_k
+from repro.core.api import ilu
+from repro.core.planner import make_plan
+
+
+matrices = st.builds(
+    matgen,
+    n=st.integers(min_value=8, max_value=72),
+    density=st.floats(min_value=0.03, max_value=0.25),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+@given(a=matrices, k=st.integers(min_value=0, max_value=3))
+@settings(max_examples=25, deadline=None)
+def test_pattern_invariants(a, k):
+    pat = symbolic_ilu_k(a, k)
+    pat.validate()
+    # A's pattern is always contained, with level 0
+    for j in range(a.n):
+        acols, _ = a.row(j)
+        pcols, plevs = pat.row(j)
+        pos = np.searchsorted(pcols, acols)
+        assert np.all(pcols[pos] == acols)
+        assert np.all(plevs[pos] == 0)
+    # levels bounded by k
+    assert pat.levels.max(initial=0) <= k
+
+
+@given(a=matrices)
+@settings(max_examples=15, deadline=None)
+def test_pilu1_always_equals_general(a):
+    g = symbolic_ilu_k(a, 1)
+    f = pilu1_symbolic(a)
+    np.testing.assert_array_equal(g.indices, f.indices)
+    np.testing.assert_array_equal(g.levels, f.levels)
+
+
+@given(a=matrices, k=st.integers(min_value=0, max_value=2),
+       band_rows=st.integers(min_value=1, max_value=24))
+@settings(max_examples=12, deadline=None)
+def test_bitcompat_any_banding(a, k, band_rows):
+    """The central theorem: band decomposition never changes a single bit."""
+    pat = symbolic_ilu_k(a, k)
+    want = numeric_ilu_ref(a, pat)
+    got = ilu(a, k, backend="jax", band_rows=band_rows).vals
+    np.testing.assert_array_equal(got.view(np.int32), want.view(np.int32))
+
+
+@given(a=matrices, band_rows=st.integers(min_value=1, max_value=16),
+       d=st.integers(min_value=1, max_value=6))
+@settings(max_examples=15, deadline=None)
+def test_planner_invariants(a, band_rows, d):
+    pat = symbolic_ilu_k(a, 1)
+    plan = make_plan(a, pat, band_rows=band_rows, n_devices=d)
+    assert plan.n_bands % d == 0
+    assert plan.n_pad == plan.n_bands * plan.band_rows
+    assert plan.n_pad >= a.n
+    # device-major permutation is a bijection
+    x = np.arange(plan.n_pad, dtype=np.int64)
+    rt = plan.rows_from_device_major(plan.rows_device_major(x))
+    np.testing.assert_array_equal(rt, x)
+    # pivot_start is monotone per row, bounded by diag
+    assert np.all(np.diff(plan.pivot_start, axis=1) >= 0)
+    assert np.all(plan.pivot_start[:, -1] <= plan.diag_pos)

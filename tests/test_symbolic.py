@@ -1,0 +1,90 @@
+"""Symbolic ILU(k) (Phase I): levels, fills, PILU(1) equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CSRMatrix,
+    matgen,
+    pilu1_symbolic,
+    poisson_2d,
+    symbolic_ilu_k,
+)
+from repro.core.symbolic import symbolic_ilu_k_bruteforce
+
+
+def _pattern_to_level_matrix(pat):
+    INF = np.int64(10**9)
+    out = np.full((pat.n, pat.n), INF, dtype=np.int64)
+    for j in range(pat.n):
+        cols, levs = pat.row(j)
+        out[j, cols] = levs
+    return out
+
+
+@pytest.mark.parametrize("rule", ["sum", "max"])
+@pytest.mark.parametrize("k", [0, 1, 2, 3])
+def test_matches_bruteforce_random(k, rule):
+    a = matgen(60, density=0.08, seed=k + 17)
+    pat = symbolic_ilu_k(a, k, rule=rule)
+    pat.validate()
+    got = _pattern_to_level_matrix(pat)
+    want = symbolic_ilu_k_bruteforce(a, k, rule=rule)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_matches_bruteforce_poisson(k):
+    a = poisson_2d(7)
+    pat = symbolic_ilu_k(a, k)
+    got = _pattern_to_level_matrix(pat)
+    want = symbolic_ilu_k_bruteforce(a, k)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_k0_is_pattern_of_a():
+    a = matgen(80, density=0.05, seed=3)
+    pat = symbolic_ilu_k(a, 0)
+    assert pat.nnz == a.nnz
+    np.testing.assert_array_equal(pat.indices, a.indices)
+    assert np.all(pat.levels == 0)
+
+
+def test_monotone_in_k():
+    """Pattern(k) is a subset of pattern(k+1); levels never increase."""
+    a = matgen(70, density=0.06, seed=5)
+    prev = None
+    for k in range(0, 4):
+        lev = _pattern_to_level_matrix(symbolic_ilu_k(a, k))
+        if prev is not None:
+            assert np.all((prev < 10**9) <= (lev < 10**9)), "pattern must grow with k"
+            both = (prev < 10**9)
+            assert np.all(lev[both] <= prev[both])
+        prev = lev
+
+
+@pytest.mark.parametrize("rule", ["sum", "max"])
+def test_pilu1_equals_general_k1(rule):
+    """PILU(1) (paper SIV-F) must equal the general algorithm at k=1."""
+    for seed in range(4):
+        a = matgen(90, density=0.05, seed=seed)
+        p_gen = symbolic_ilu_k(a, 1, rule=rule)
+        p_fast = pilu1_symbolic(a, rule=rule)
+        np.testing.assert_array_equal(p_gen.indptr, p_fast.indptr)
+        np.testing.assert_array_equal(p_gen.indices, p_fast.indices)
+        np.testing.assert_array_equal(p_gen.levels, p_fast.levels)
+
+
+def test_pilu1_structured():
+    a = poisson_2d(9)
+    p_gen = symbolic_ilu_k(a, 1)
+    p_fast = pilu1_symbolic(a)
+    np.testing.assert_array_equal(p_gen.indices, p_fast.indices)
+    np.testing.assert_array_equal(p_gen.levels, p_fast.levels)
+
+
+def test_fill_grows_with_k_measured():
+    """Fig 6 premise: fill count increases with k."""
+    a = matgen(200, density=0.03, seed=11)
+    nnz = [symbolic_ilu_k(a, k).nnz for k in range(4)]
+    assert nnz == sorted(nnz)
+    assert nnz[3] > nnz[0]

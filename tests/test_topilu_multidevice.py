@@ -1,0 +1,43 @@
+"""Multi-device TOP-ILU: bitwise equality vs the sequential oracle.
+
+Each case runs in a subprocess because JAX locks the host device count at
+first init (the main pytest process must keep seeing 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_check.py")
+
+
+def _run(n, k, band_rows, broadcast, devices):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env.pop("JAX_PLATFORMS", None)
+    res = subprocess.run(
+        [sys.executable, SCRIPT, str(n), str(k), str(band_rows), broadcast],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-2000:]}"
+    assert "bitwise-equal" in res.stdout
+
+
+@pytest.mark.parametrize("broadcast", ["psum", "ring"])
+def test_topilu_8dev_k1(broadcast):
+    _run(n=96, k=1, band_rows=8, broadcast=broadcast, devices=8)
+
+
+def test_topilu_8dev_k2():
+    _run(n=96, k=2, band_rows=8, broadcast="psum", devices=8)
+
+
+def test_topilu_nondivisible_devices():
+    """Band count not a multiple of D exercises padding/ownership logic."""
+    _run(n=100, k=1, band_rows=4, broadcast="psum", devices=5)
+
+
+def test_topilu_band_eq_one():
+    """R=1: every row is a band — the maximal-parallelism degenerate case."""
+    _run(n=64, k=1, band_rows=1, broadcast="psum", devices=4)

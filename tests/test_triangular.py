@@ -1,0 +1,68 @@
+"""Triangular solves: exact substitution vs scipy, Jacobi variant."""
+import numpy as np
+import pytest
+import scipy.sparse.linalg as spla
+
+from repro.core import matgen, numeric_ilu_ref, poisson_2d, split_lu, symbolic_ilu_k
+from repro.core.triangular import (
+    build_triangular_plan,
+    make_jacobi_triangular_solver,
+    make_triangular_solver,
+)
+
+
+def _setup(n=80, k=1, seed=0):
+    a = matgen(n, density=0.07, seed=seed)
+    pat = symbolic_ilu_k(a, k)
+    vals = numeric_ilu_ref(a, pat)
+    return a, pat, vals
+
+
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_solve_matches_scipy(k):
+    a, pat, vals = _setup(k=k)
+    L, U = split_lu(pat, vals)
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal(a.n).astype(np.float32)
+    want = spla.spsolve_triangular(U.tocsr(), spla.spsolve_triangular(L.tocsr(), b, lower=True), lower=False)
+    solve = make_triangular_solver(pat, vals)
+    got = np.asarray(solve(b))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_solve_poisson():
+    a = poisson_2d(8)
+    pat = symbolic_ilu_k(a, 1)
+    vals = numeric_ilu_ref(a, pat)
+    L, U = split_lu(pat, vals)
+    b = np.ones(a.n, np.float32)
+    want = spla.spsolve_triangular(U.tocsr(), spla.spsolve_triangular(L.tocsr(), b, lower=True), lower=False)
+    got = np.asarray(make_triangular_solver(pat, vals)(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_wavefront_schedule_is_valid():
+    """Every row appears exactly once; dependencies respect level order."""
+    _, pat, vals = _setup(k=2)
+    plan = build_triangular_plan(pat, vals)
+    n = plan.n
+    seen = plan.l_levels[plan.l_levels < n]
+    assert sorted(seen.tolist()) == list(range(n))
+    level_of = np.zeros(n, np.int64)
+    for l in range(plan.l_levels.shape[0]):
+        for r in plan.l_levels[l]:
+            if r < n:
+                level_of[r] = l
+    for j in range(n):
+        deps = plan.l_cols[j][plan.l_cols[j] < n]
+        assert np.all(level_of[deps] < level_of[j])
+
+
+def test_jacobi_converges_to_exact():
+    a, pat, vals = _setup(k=1)
+    b = np.random.default_rng(2).standard_normal(a.n).astype(np.float32)
+    exact = np.asarray(make_triangular_solver(pat, vals)(b))
+    plan = build_triangular_plan(pat, vals)
+    depth = plan.l_levels.shape[0] + plan.u_levels.shape[0]
+    approx = np.asarray(make_jacobi_triangular_solver(pat, vals, sweeps=depth + 2)(b))
+    np.testing.assert_allclose(approx, exact, rtol=1e-4, atol=1e-4)
