@@ -64,11 +64,9 @@ def main():
 
     n = int(sys.argv[1]) if len(sys.argv) > 1 else 2048
     D = len(jax.devices())
-    from jax.sharding import Mesh
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
 
-    mesh = Mesh(np.asarray(jax.devices()).reshape(D), ("band",),
-                axis_types=(AxisType.Auto,))
+    mesh = make_mesh(np.asarray(jax.devices()).reshape(D), ("band",))
     a = matgen(n, density=min(0.02, 16.0 / n), seed=0)
     pat = pilu1_symbolic(a)
     ops = exact_op_counts(a, pat)

@@ -1,14 +1,23 @@
 """Benchmark harness — one entry per paper table/figure + kernel microbench.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--emit-json PATH]
 
 Prints ``name,us_per_call,derived`` CSV. Paper-table benches report their
 headline derived quantity (a speedup or a ratio); kernel benches report
 measured interpret-mode microseconds per call (CPU — TPU numbers come from
 the roofline, EXPERIMENTS.md §Roofline).
+
+``--emit-json BENCH_solver.json`` additionally serializes the
+device-resident solver-engine metrics (preconditioner-apply latency, GMRES
+iterations/sec, first/steady solve wall times) so later PRs have a perf
+trajectory to compare against. Set ``REPRO_JIT_CACHE=<dir>`` to enable
+jax's persistent compilation cache (makes the one-time engine jit a
+once-per-machine cost instead of once-per-process).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -102,15 +111,50 @@ def bench_bitcompat(rows, quick=True):
     rows.append(("paper.bitcompat_banded", us, f"bitwise_equal={eq}"))
 
 
+def bench_solver(rows, quick=True):
+    """Device-resident preconditioned Krylov engine (PR-1 tentpole)."""
+    from benchmarks import bench_ilu as B
+
+    m = B.solver_engine(quick)
+    rows.append(("solver.precond_apply", m["precond_apply_seconds"] * 1e6,
+                 f"applies_per_sec={m['precond_applies_per_sec']:.0f}"))
+    rows.append(("solver.gmres_steady", m["gmres_steady_solve_seconds"] * 1e6,
+                 f"iters_per_sec={m['gmres_iters_per_sec']:.1f}"))
+    rows.append(("solver.gmres_first", m["gmres_first_solve_seconds"] * 1e6,
+                 f"n={m['problem']['n']} converged={m['converged']} rel={m['residual']:.1e}"))
+    rows.append(("solver.gmres_batched", m["batched_steady_seconds_per_rhs"] * 1e6,
+                 f"rhs={m['batched_rhs']} all_converged={m['batched_converged']}"))
+    return m
+
+
 def main() -> None:
-    quick = "--full" not in sys.argv
+    argv = sys.argv[1:]
+    quick = "--full" not in argv
+    emit_json = None
+    if "--emit-json" in argv:
+        i = argv.index("--emit-json") + 1
+        if i >= len(argv) or argv[i].startswith("--"):
+            sys.exit("--emit-json requires a file path")
+        emit_json = argv[i]
+    cache_dir = os.environ.get("REPRO_JIT_CACHE")
+    if cache_dir:
+        import jax
+
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
     rows = []
+    solver_metrics = bench_solver(rows, quick)
     bench_bitcompat(rows, quick)
     bench_kernels(rows, quick)
     bench_paper_tables(rows, quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if emit_json:
+        with open(emit_json, "w") as f:
+            json.dump({"bench": "solver_engine", "quick": quick,
+                       "metrics": solver_metrics}, f, indent=2)
+        print(f"wrote {emit_json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""Version-compatibility shims for the JAX API surface we depend on.
+
+The codebase targets the modern spelling (``jax.shard_map`` with
+``check_vma=``); older jax releases (<= 0.4.x) only ship
+``jax.experimental.shard_map.shard_map`` whose replication-check kwarg is
+``check_rep``. Import ``shard_map`` from here instead of from ``jax``.
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # jax >= 0.6: public top-level API
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f=None, *, check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        if f is None:
+            return lambda g: _shard_map(g, **kw)
+        return _shard_map(f, **kw)
+
+
+def make_mesh(devices, axis_names):
+    """``jax.sharding.Mesh`` with Auto axis types when the installed jax
+    supports them (>= 0.5), plain ``Mesh`` otherwise."""
+    from jax.sharding import Mesh
+
+    try:
+        from jax.sharding import AxisType
+    except ImportError:  # pragma: no cover - depends on installed jax
+        return Mesh(devices, axis_names)
+    return Mesh(devices, axis_names, axis_types=(AxisType.Auto,) * len(axis_names))
+
+
+__all__ = ["shard_map", "make_mesh"]

@@ -30,16 +30,31 @@ class ILUFactorization:
     vals: np.ndarray  # CSR-aligned filled values
     symbolic_seconds: float
     numeric_seconds: float
+    # lazily built PrecondApply instances, keyed by use_pallas — the
+    # triangular plan + compiled sweep are built once and reused across
+    # every solve/restart/RHS batch against this factorization
+    _preconds: dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
 
     def lu_matrices(self):
         return split_lu(self.pattern, self.vals)
 
-    def solve(self, b: np.ndarray) -> np.ndarray:
-        """Apply the preconditioner: solve L y = b, then U x = y."""
-        from .triangular import make_triangular_solver
+    def precond(self, use_pallas: bool = True):
+        """The cached device-resident M^{-1} apply (``PrecondApply``)."""
+        key = bool(use_pallas)
+        if key not in self._preconds:
+            from .triangular import PrecondApply
 
-        solver = make_triangular_solver(self.pattern, self.vals)
-        return np.asarray(solver(b.astype(np.float32)))
+            self._preconds[key] = PrecondApply(self.pattern, self.vals, use_pallas=key)
+        return self._preconds[key]
+
+    def solve(self, b: np.ndarray) -> np.ndarray:
+        """Apply the preconditioner: solve L y = b, then U x = y.
+
+        Batched input (batch, n) is vmapped through the same cached plan."""
+        apply = self.precond()
+        if np.ndim(b) == 2:
+            return np.asarray(apply.batched(np.asarray(b, np.float32)))
+        return np.asarray(apply(np.asarray(b, np.float32)))
 
     @property
     def nnz(self) -> int:

@@ -1,0 +1,68 @@
+"""Bit-deterministic sparse row arithmetic shared by references and kernels.
+
+The paper's bit-compatibility guarantee holds only if every implementation
+of the same reduction performs the same floating-point operations in the
+same order. XLA breaks that silently in two ways:
+
+* ``jnp.sum(..., axis=1)`` may lower to different reduction trees at
+  different shapes / fusion contexts, and
+* a ``mul`` feeding an ``add`` may be contracted into an FMA in one
+  compilation and not another (observed on CPU between a monolithic jitted
+  expression and the identical code inside a Pallas block).
+
+:func:`masked_lane_sum` pins the contract: products are rounded to f32
+through an ``optimization_barrier`` (no FMA contraction), then accumulated
+left-to-right in lane order. Every sparse row reduction on the solve path —
+the jnp references, the Pallas kernels, and the wavefront sweeps — goes
+through this helper so they agree bitwise by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+_UNROLL = 16  # lanes unrolled per graph node; wider rows scan over chunks
+
+
+def _lane_chunk(acc, cols, vals, gathered, limit):
+    for lane in range(cols.shape[-1]):
+        prod = jax.lax.optimization_barrier(vals[..., lane] * gathered[..., lane])
+        acc = acc + jnp.where(cols[..., lane] < limit, prod, 0.0)
+    return acc
+
+
+def masked_lane_sum(cols: jnp.ndarray, vals: jnp.ndarray, gathered: jnp.ndarray, limit) -> jnp.ndarray:
+    """Sum ``vals * gathered`` over the trailing lane axis where ``cols < limit``.
+
+    ``cols``/``vals``/``gathered`` share shape ``(..., W)``; returns ``(...,)``.
+    Lane order is the accumulation order (matches a sequential sweep over a
+    sorted sparse row); each product is barriered so it is rounded to f32
+    before the add. Rows wider than ``_UNROLL`` lanes are processed as a
+    ``lax.scan`` over fixed-size chunks — identical accumulation order
+    (chunk-sequential, lane-sequential within a chunk), so the result is
+    bitwise independent of the chunking, with graph size O(_UNROLL) instead
+    of O(W).
+    """
+    w = cols.shape[-1]
+    if w <= _UNROLL:
+        return _lane_chunk(jnp.zeros(cols.shape[:-1], vals.dtype), cols, vals, gathered, limit)
+    pad = (-w) % _UNROLL
+    if pad:
+        widths = [(0, 0)] * (cols.ndim - 1) + [(0, pad)]
+        cols = jnp.pad(cols, widths, constant_values=int(limit))  # masked out
+        vals = jnp.pad(vals, widths)
+        gathered = jnp.pad(gathered, widths)
+    nchunk = cols.shape[-1] // _UNROLL
+
+    def to_chunks(x):
+        x = x.reshape(x.shape[:-1] + (nchunk, _UNROLL))
+        return jnp.moveaxis(x, -2, 0)  # (nchunk, ..., _UNROLL)
+
+    def body(acc, inp):
+        c, v, g = inp
+        return _lane_chunk(acc, c, v, g, limit), None
+
+    acc0 = jnp.zeros(cols.shape[:-1], vals.dtype)
+    acc, _ = jax.lax.scan(body, acc0, (to_chunks(cols), to_chunks(vals), to_chunks(gathered)))
+    return acc

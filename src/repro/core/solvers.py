@@ -5,6 +5,24 @@ is that preconditioning time dominates the solver as processors scale, so a
 real system must include the solver to measure anything meaningful
 (paper §I, §V-B).
 
+Execution model: **device-resident**. Each solver compiles to a single
+jitted computation — the Krylov iteration, the preconditioner application
+(fused Pallas wavefront sweep, see ``repro.core.triangular.PrecondApply``),
+the SpMV (``repro.kernels.ops.spmv_ell``), and for GMRES the restart logic
+and the Givens-rotation least-squares solve all live inside one
+``lax.while_loop``. There is exactly one dispatch per solve: no host
+round-trips per iteration or per restart, no host ``lstsq``. Residual
+histories are recorded into fixed-size device buffers carried through the
+loop and trimmed on the host afterwards.
+
+Multi-RHS: ``gmres_batched`` (or a 2-D ``b`` passed to ``solve_with_ilu``)
+``vmap``s the same single-RHS engine over a stack of right-hand sides —
+one dispatch for the whole batch, with per-lane freezing so already
+converged systems stop updating (their iteration counts and histories stay
+exact). The batched path shares the cached triangular plan; use it when
+amortizing one factorization over many right-hand sides (the serving
+scenario), not when RHS arrive one at a time.
+
 All solvers take ``matvec`` (A·x) and ``precond`` (M^{-1}·x, identity if
 None) as functions, run in float32, and report iteration counts + residual
 history so tests/benches can reproduce the paper's "larger k => fewer
@@ -13,14 +31,30 @@ iterations" trade-off (Fig 5 discussion).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Optional
+import functools
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .bitmath import masked_lane_sum
 from .planner import COL_SENTINEL
+
+def _cached_engine(matvec, M, key, build):
+    """Compiled-engine memo stored *on the matvec closure itself*: repeated
+    solves with the same (matvec, precond) objects reuse one executable with
+    zero retracing, and the engine (plus its captured device arrays) is
+    garbage-collected with the closure — no module-level registry, so a
+    stream of different matrices cannot grow device memory without bound."""
+    try:
+        store = matvec.__dict__.setdefault("_repro_engines", {})
+    except AttributeError:  # exotic callable without __dict__: no caching
+        return build()
+    fn = store.get((M, key))
+    if fn is None:
+        fn = store[(M, key)] = build()
+    return fn
 
 
 @dataclasses.dataclass
@@ -29,28 +63,39 @@ class SolveResult:
     iterations: int
     residual: float
     converged: bool
-    history: np.ndarray  # residual norm per (outer) iteration
+    history: np.ndarray  # residual norm per iteration (GMRES: per restart)
 
 
 def make_ell_matvec(cols: jnp.ndarray, vals: jnp.ndarray, n: int) -> Callable:
-    """Row-major ELL SpMV — the jnp reference the Pallas kernel must match."""
+    """Row-major ELL SpMV — the jnp reference the Pallas kernel must match
+    (both reduce through ``masked_lane_sum``, so they agree bitwise)."""
     def matvec(x):
         xg = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
         gathered = xg[jnp.minimum(cols, n)]
-        return jnp.sum(jnp.where(cols < COL_SENTINEL, vals * gathered, 0.0), axis=1)[:n]
+        return masked_lane_sum(cols, vals, gathered, COL_SENTINEL)[:n]
+    return matvec
+
+
+def make_pallas_matvec(cols: jnp.ndarray, vals: jnp.ndarray, n: int) -> Callable:
+    """ELL SpMV through the Pallas kernel, whole vector as one block (the
+    solve path keeps x VMEM-resident; shard first for n beyond ~2^20)."""
+    from repro.kernels import ops
+
+    def matvec(x):
+        return ops.spmv_ell(cols, vals, x, bm=n)
     return matvec
 
 
 def csr_to_ell_arrays(a):
-    """CSRMatrix -> (cols, vals) sentinel-padded ELL arrays."""
+    """CSRMatrix -> (cols, vals) sentinel-padded ELL arrays (vectorized)."""
     lens = np.diff(a.indptr)
-    W = int(lens.max())
+    W = max(int(lens.max(initial=0)), 1)
     cols = np.full((a.n, W), COL_SENTINEL, np.int32)
     vals = np.zeros((a.n, W), np.float32)
-    for j in range(a.n):
-        c, v = a.row(j)
-        cols[j, : len(c)] = c
-        vals[j, : len(v)] = v
+    row_of = np.repeat(np.arange(a.n), lens)
+    pos = np.arange(a.nnz, dtype=np.int64) - a.indptr[row_of]
+    cols[row_of, pos] = a.indices
+    vals[row_of, pos] = a.data
     return jnp.asarray(cols), jnp.asarray(vals)
 
 
@@ -58,16 +103,18 @@ def _identity(x):
     return x
 
 
+def _trim_history(hist: np.ndarray, it: int, bnorm: float) -> np.ndarray:
+    return np.asarray(hist)[:it] / max(bnorm, 1e-30)
+
+
 # --------------------------------------------------------------------------
 # CG (SPD systems — e.g. the Poisson benchmark)
 # --------------------------------------------------------------------------
-def cg(matvec, b, precond=None, tol=1e-5, maxiter=500):
-    M = precond or _identity
-    b = jnp.asarray(b, jnp.float32)
+def _cg_core(matvec, M, b, tol, maxiter):
     bnorm = jnp.linalg.norm(b)
 
     def body(carry):
-        x, r, z, p, rz, it, _ = carry
+        x, r, z, p, rz, it, _, hist = carry
         ap = matvec(p)
         alpha = rz / jnp.vdot(p, ap)
         x = x + alpha * p
@@ -75,31 +122,42 @@ def cg(matvec, b, precond=None, tol=1e-5, maxiter=500):
         z = M(r)
         rz_new = jnp.vdot(r, z)
         p = z + (rz_new / rz) * p
-        return x, r, z, p, rz_new, it + 1, jnp.linalg.norm(r)
+        rnorm = jnp.linalg.norm(r)
+        hist = hist.at[it].set(rnorm)
+        return x, r, z, p, rz_new, it + 1, rnorm, hist
 
     def cond(carry):
-        *_, it, rnorm = carry
+        *_, it, rnorm, _h = carry
         return (rnorm > tol * bnorm) & (it < maxiter)
 
     x0 = jnp.zeros_like(b)
     r0 = b
     z0 = M(r0)
-    carry = (x0, r0, z0, z0, jnp.vdot(r0, z0), jnp.int32(0), jnp.linalg.norm(r0))
-    x, r, *_, it, rnorm = jax.lax.while_loop(cond, body, carry)
-    rel = float(rnorm / bnorm)
-    return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01, np.asarray([rel]))
+    carry = (x0, r0, z0, z0, jnp.vdot(r0, z0), jnp.int32(0),
+             jnp.linalg.norm(r0), jnp.zeros(maxiter, jnp.float32))
+    x, r, *_, it, rnorm, hist = jax.lax.while_loop(cond, body, carry)
+    return x, it, rnorm, bnorm, hist
+
+
+def cg(matvec, b, precond=None, tol=1e-5, maxiter=500):
+    M = precond or _identity
+    b = jnp.asarray(b, jnp.float32)
+    run = _cached_engine(matvec, M, ("cg", tol, maxiter), lambda: jax.jit(
+        functools.partial(_cg_core, matvec, M, tol=tol, maxiter=maxiter)))
+    x, it, rnorm, bnorm, hist = run(b)
+    rel = float(rnorm) / max(float(bnorm), 1e-30)
+    return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01,
+                       _trim_history(hist, int(it), float(bnorm)))
 
 
 # --------------------------------------------------------------------------
 # BiCGSTAB (general nonsymmetric)
 # --------------------------------------------------------------------------
-def bicgstab(matvec, b, precond=None, tol=1e-5, maxiter=500):
-    M = precond or _identity
-    b = jnp.asarray(b, jnp.float32)
+def _bicgstab_core(matvec, M, b, tol, maxiter):
     bnorm = jnp.linalg.norm(b)
 
     def body(carry):
-        x, r, rhat, p, v, rho, alpha, omega, it, _ = carry
+        x, r, rhat, p, v, rho, alpha, omega, it, _, hist = carry
         rho_new = jnp.vdot(rhat, r)
         beta = (rho_new / rho) * (alpha / omega)
         p = r + beta * (p - omega * v)
@@ -112,93 +170,222 @@ def bicgstab(matvec, b, precond=None, tol=1e-5, maxiter=500):
         omega = jnp.vdot(t, s) / jnp.vdot(t, t)
         x = x + alpha * phat + omega * shat
         r = s - omega * t
-        return x, r, rhat, p, v, rho_new, alpha, omega, it + 1, jnp.linalg.norm(r)
+        rnorm = jnp.linalg.norm(r)
+        hist = hist.at[it].set(rnorm)
+        return x, r, rhat, p, v, rho_new, alpha, omega, it + 1, rnorm, hist
 
     def cond(carry):
-        *_, it, rnorm = carry
+        *_, it, rnorm, _h = carry
         return (rnorm > tol * bnorm) & (it < maxiter) & jnp.isfinite(rnorm)
 
     x0 = jnp.zeros_like(b)
     r0 = b
     carry = (
         x0, r0, r0, jnp.zeros_like(b), jnp.zeros_like(b),
-        jnp.float32(1), jnp.float32(1), jnp.float32(1), jnp.int32(0), jnp.linalg.norm(r0),
+        jnp.float32(1), jnp.float32(1), jnp.float32(1), jnp.int32(0),
+        jnp.linalg.norm(r0), jnp.zeros(maxiter, jnp.float32),
     )
     out = jax.lax.while_loop(cond, body, carry)
-    x, *_, it, rnorm = out
-    rel = float(rnorm / bnorm)
-    return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01, np.asarray([rel]))
+    x, *_, it, rnorm, hist = out
+    return x, it, rnorm, bnorm, hist
 
 
-# --------------------------------------------------------------------------
-# Restarted GMRES(m) with right preconditioning
-# --------------------------------------------------------------------------
-def gmres(matvec, b, precond=None, restart=30, tol=1e-5, maxiter=20):
-    """maxiter counts *outer* restarts. Solves A (M^{-1} u) = b, x = M^{-1} u."""
+def bicgstab(matvec, b, precond=None, tol=1e-5, maxiter=500):
     M = precond or _identity
     b = jnp.asarray(b, jnp.float32)
-    n = b.shape[0]
-    bnorm = float(jnp.linalg.norm(b))
-    m = restart
+    run = _cached_engine(matvec, M, ("bicgstab", tol, maxiter), lambda: jax.jit(
+        functools.partial(_bicgstab_core, matvec, M, tol=tol, maxiter=maxiter)))
+    x, it, rnorm, bnorm, hist = run(b)
+    rel = float(rnorm) / max(float(bnorm), 1e-30)
+    return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01,
+                       _trim_history(hist, int(it), float(bnorm)))
 
-    @jax.jit
-    def inner(x0):
-        r0 = b - matvec(x0)
-        beta = jnp.linalg.norm(r0)
-        V = jnp.zeros((m + 1, n), jnp.float32).at[0].set(r0 / beta)
-        H = jnp.zeros((m + 1, m), jnp.float32)
+
+# --------------------------------------------------------------------------
+# Restarted GMRES(m), right-preconditioned, fully device-resident
+# --------------------------------------------------------------------------
+def _gmres_core(matvec, M, b, m, tol, maxiter):
+    """One jitted computation: Arnoldi + Givens QR of the Hessenberg +
+    restarts under a single ``lax.while_loop``.
+
+    The big (n-sized) scan holds only the Arnoldi recurrence. The Givens QR
+    runs as a second, m-sized scan over Hessenberg columns: it yields the
+    least-squares residual ``|g[j+1]|`` after every inner step, from which
+    the number of *useful* steps ``cnt`` is recovered, and the update is
+    assembled from the first ``cnt`` columns only (the tail is masked out of
+    the back-substitution) — identical to stopping mid-restart. No
+    ``lstsq``, no host synchronization anywhere.
+    """
+    n = b.shape[0]
+    bnorm = jnp.linalg.norm(b)
+    tolb = tol * bnorm
+
+    def inner(x0, r0, beta):
+        V0 = jnp.zeros((m + 1, n), jnp.float32).at[0].set(r0 / jnp.maximum(beta, 1e-30))
+        H0 = jnp.zeros((m + 1, m), jnp.float32)
 
         def arnoldi(carry, j):
             V, H = carry
             w = matvec(M(V[j]))
+
             # modified Gram-Schmidt
             def mgs(i, wh):
-                w, H = wh
+                w, h = wh
                 hij = jnp.vdot(V[i], w) * (i <= j)
-                H = H.at[i, j].set(hij)
-                return w - hij * V[i], H
-            w, H = jax.lax.fori_loop(0, m + 1, lambda i, wh: mgs(i, wh), (w, H))
+                return w - hij * V[i], h.at[i].set(hij)
+
+            w, h = jax.lax.fori_loop(0, m + 1, mgs, (w, jnp.zeros(m + 1, jnp.float32)))
             hnext = jnp.linalg.norm(w)
-            H = H.at[j + 1, j].set(hnext)
             V = V.at[j + 1].set(w / jnp.maximum(hnext, 1e-30))
-            return (V, H), hnext
+            H = H.at[:, j].set(h.at[j + 1].set(hnext))
+            return (V, H), None
 
-        (V, H), _ = jax.lax.scan(arnoldi, (V, H), jnp.arange(m))
-        # solve min || beta e1 - H y ||
-        e1 = jnp.zeros(m + 1, jnp.float32).at[0].set(beta)
-        y, *_ = jnp.linalg.lstsq(H, e1, rcond=None)
+        (V, H), _ = jax.lax.scan(arnoldi, (V0, H0), jnp.arange(m))
+
+        # Givens QR over Hessenberg columns (m-sized data, cheap)
+        g0 = jnp.zeros(m + 1, jnp.float32).at[0].set(beta)
+
+        def qr_col(carry, inp):
+            cs, sn, g = carry
+            h, j = inp
+
+            def rot(i, h):
+                on = i < j
+                hi = cs[i] * h[i] + sn[i] * h[i + 1]
+                hi1 = -sn[i] * h[i] + cs[i] * h[i + 1]
+                return (h.at[i].set(jnp.where(on, hi, h[i]))
+                         .at[i + 1].set(jnp.where(on, hi1, h[i + 1])))
+
+            h = jax.lax.fori_loop(0, m, rot, h)
+            dsafe = jnp.maximum(jnp.sqrt(h[j] ** 2 + h[j + 1] ** 2), 1e-30)
+            c, s = h[j] / dsafe, h[j + 1] / dsafe
+            hcol = h.at[j].set(c * h[j] + s * h[j + 1]).at[j + 1].set(0.0)
+            g = g.at[j + 1].set(-s * g[j]).at[j].set(c * g[j])
+            return (cs.at[j].set(c), sn.at[j].set(s), g), (hcol[:m], jnp.abs(g[j + 1]))
+
+        (_cs, _sn, g), (r_cols, res_seq) = jax.lax.scan(
+            qr_col, (jnp.zeros(m, jnp.float32), jnp.zeros(m, jnp.float32), g0),
+            (H.T, jnp.arange(m)),
+        )
+        # useful steps: everything up to (and including) the first step that
+        # cleared the tolerance; the masked tail contributes nothing below
+        conv = res_seq <= tolb
+        cnt = jnp.where(jnp.any(conv), jnp.argmax(conv) + 1, m).astype(jnp.int32)
+        kmask = jnp.arange(m) < cnt
+        R = r_cols.T * kmask  # zero masked columns; masked rows get unit diag
+        g_eff = jnp.where(kmask, g[:m], 0.0)
+
+        def backsub(jj, y):
+            j = m - 1 - jj
+            rj = R[j] * (jnp.arange(m) > j)
+            num = g_eff[j] - jnp.vdot(rj, y)
+            den = jnp.where(kmask[j], R[j, j], 1.0)
+            return y.at[j].set(num / den)
+
+        y = jax.lax.fori_loop(0, m, backsub, jnp.zeros(m, jnp.float32))
         u = V[:m].T @ y
-        x = x0 + M(u)
-        rnorm = jnp.linalg.norm(b - matvec(x))
-        return x, rnorm
+        return x0 + M(u), cnt
 
-    x = jnp.zeros_like(b)
-    history = []
-    it = 0
-    rnorm = bnorm
-    for it in range(1, maxiter + 1):
-        x, rn = inner(x)
-        rnorm = float(rn)
-        history.append(rnorm / bnorm)
-        if rnorm <= tol * bnorm:
-            break
-    rel = rnorm / bnorm
-    return SolveResult(np.asarray(x), it * m, rel, rel <= tol * 1.01, np.asarray(history))
+    def outer_cond(carry):
+        _x, _r, it, res, _hist, _tot = carry
+        return (res > tolb) & (it < maxiter)
+
+    def outer_body(carry):
+        x, r, it, res, hist, tot = carry
+        active = (res > tolb) & (it < maxiter)  # freezes converged vmap lanes
+        x2, cnt = inner(x, r, res)
+        r2 = b - matvec(x2)
+        rtrue = jnp.linalg.norm(r2)
+        new = (x2, r2, it + 1, rtrue, hist.at[it].set(rtrue), tot + cnt)
+        return jax.tree_util.tree_map(
+            lambda nw, old: jnp.where(active, nw, old), new, carry
+        )
+
+    init = (jnp.zeros_like(b), b, jnp.int32(0), bnorm,
+            jnp.zeros(maxiter, jnp.float32), jnp.int32(0))
+    x, _r, it, res, hist, tot = jax.lax.while_loop(outer_cond, outer_body, init)
+    rel = jnp.where(bnorm > 0, res / jnp.maximum(bnorm, 1e-30), 0.0)
+    return x, rel, it, tot, hist, bnorm
+
+
+def gmres(matvec, b, precond=None, restart=30, tol=1e-5, maxiter=20):
+    """maxiter counts *outer* restarts. Solves A (M^{-1} u) = b, x = M^{-1} u.
+
+    ``iterations`` reports the inner (Arnoldi) steps that did work;
+    ``history`` holds the true relative residual after each restart.
+    Compilation is cached on the identity of ``matvec``/``precond`` — reuse
+    the same closures (e.g. a factorization's ``PrecondApply``) and repeated
+    solves skip straight to the compiled engine."""
+    M = precond or _identity
+    b = jnp.asarray(b, jnp.float32)
+    run = _cached_engine(matvec, M, ("gmres", restart, tol, maxiter), lambda: jax.jit(
+        functools.partial(_gmres_core, matvec, M, m=restart, tol=tol, maxiter=maxiter)))
+    x, rel, it, tot, hist, bnorm = run(b)
+    rel = float(rel)
+    return SolveResult(np.asarray(x), int(tot), rel, rel <= tol * 1.01,
+                       _trim_history(hist, int(it), float(bnorm)))
+
+
+def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) -> List[SolveResult]:
+    """GMRES over a (batch, n) stack of right-hand sides in one dispatch.
+
+    ``vmap`` of the single-RHS engine: every lane shares the cached
+    triangular plan and SpMV arrays; converged lanes freeze (per-lane
+    iteration counts and histories stay exact) while the rest continue."""
+    M = precond or _identity
+    bs = jnp.asarray(bs, jnp.float32)
+    if bs.ndim != 2:
+        raise ValueError(f"gmres_batched expects (batch, n), got shape {bs.shape}")
+    run = _cached_engine(matvec, M, ("gmres_batched", restart, tol, maxiter), lambda: jax.jit(
+        jax.vmap(functools.partial(_gmres_core, matvec, M, m=restart, tol=tol, maxiter=maxiter))))
+    x, rel, it, tot, hist, bnorm = run(bs)
+    out = []
+    for i in range(bs.shape[0]):
+        r = float(rel[i])
+        out.append(SolveResult(np.asarray(x[i]), int(tot[i]), r, r <= tol * 1.01,
+                               _trim_history(hist[i], int(it[i]), float(bnorm[i]))))
+    return out
 
 
 def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
-                   band_rows=32, **kw):
-    """End-to-end: factorize with ILU(k), then solve. Returns (SolveResult, fact)."""
-    from .api import ilu
-    from .triangular import make_triangular_solver
+                   band_rows=32, use_pallas=True, **kw):
+    """End-to-end: factorize with ILU(k), then solve. Returns (SolveResult, fact).
 
-    cols, vals = csr_to_ell_arrays(a)
-    matvec = make_ell_matvec(cols, vals, a.n)
+    The SpMV runs through the Pallas ELL kernel and the preconditioner
+    through the factorization's cached ``PrecondApply`` (fused wavefront
+    kernel) — the whole iteration is device-resident. A 2-D ``b`` of shape
+    (batch, n) routes through ``gmres_batched`` and returns a list of
+    results sharing one factorization.
+
+    ELL arrays, the matvec closure, and the factorization are memoized on
+    the matrix object: the solver jits are keyed on (matvec, precond)
+    identity, so repeated solves against the same matrix reuse one compiled
+    engine instead of retracing (and the jit cache holds one entry per
+    matrix, not per call). Mutating ``a`` in place invalidates none of
+    this — build a fresh CSRMatrix instead.
+    """
+    from .api import ilu
+
+    cache = a.__dict__.setdefault("_solve_cache", {})
+    mv_key = ("matvec", bool(use_pallas))
+    if mv_key not in cache:
+        cols, vals = csr_to_ell_arrays(a)
+        mk = make_pallas_matvec if use_pallas else make_ell_matvec
+        cache[mv_key] = mk(cols, vals, a.n)
+    matvec = cache[mv_key]
     fact = None
     precond = None
     if k is not None:
-        fact = ilu(a, k, backend=backend, band_rows=band_rows)
-        precond = make_triangular_solver(fact.pattern, fact.vals)
+        f_key = ("fact", k, backend, band_rows)
+        if f_key not in cache:
+            cache[f_key] = ilu(a, k, backend=backend, band_rows=band_rows)
+        fact = cache[f_key]
+        precond = fact.precond(use_pallas=use_pallas)
+    b = jnp.asarray(b, jnp.float32)
+    if b.ndim == 2:
+        if method != "gmres":
+            raise ValueError("batched right-hand sides are supported for method='gmres' only")
+        return gmres_batched(matvec, b, precond, tol=tol, **kw), fact
     fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]
-    res = fn(matvec, jnp.asarray(b, jnp.float32), precond, tol=tol, **kw)
+    res = fn(matvec, b, precond, tol=tol, **kw)
     return res, fact

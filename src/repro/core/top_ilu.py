@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from .planner import NumericPlan, make_plan
 from .numeric_jax import make_banded_factorizer, plan_device_arrays

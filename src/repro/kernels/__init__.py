@@ -5,4 +5,10 @@ Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), wrapped by
 Kernels target TPU VMEM/MXU; on CPU they run in interpret mode.
 """
 
-from .ops import panel_update, spmv_ell, trsm_left_unit_lower, trsm_right_upper  # noqa: F401
+from .ops import (  # noqa: F401
+    panel_update,
+    spmv_ell,
+    tri_solve_wavefront,
+    trsm_left_unit_lower,
+    trsm_right_upper,
+)

@@ -17,6 +17,7 @@ import numpy as np
 from . import panel_update as _pu
 from . import spmv_ell as _sp
 from . import tri_solve as _ts
+from . import tri_solve_wavefront as _tw
 from . import ref as _ref
 
 _DISABLED = os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1"
@@ -68,6 +69,16 @@ def trsm_left_unit_lower(l, a, bn=256):
     ap = _pad2(a, bs, bn_)
     out = _ts.trsm_left_unit_lower(l, ap, bn=bn_, interpret=_interpret())
     return out[:, :n]
+
+
+def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
+                        u_rhs_idx, out_perm, b):
+    """Fused (LU)^{-1} b over level-major plan arrays (bit-compatible)."""
+    args = (l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
+            u_rhs_idx, out_perm, b)
+    if _DISABLED:
+        return _ref.tri_solve_wavefront_ref(*args)
+    return _tw.tri_solve_wavefront(*args, interpret=_interpret())
 
 
 def spmv_ell(cols, vals, x, bm=512):

@@ -1,14 +1,18 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
-Each kernel's sweep test asserts allclose against these references across
-shapes and dtypes; the references are also what the rest of the system uses
-when ``REPRO_DISABLE_PALLAS=1``.
+Each kernel's sweep test asserts against these references across shapes and
+dtypes; the references are also what the rest of the system uses when
+``REPRO_DISABLE_PALLAS=1``. References that sit on the bit-compatible solve
+path (`spmv_ell_ref`, the triangular-substitution refs) share their
+reduction primitive (`masked_lane_sum`) with the kernels, so kernel and
+reference agree *bitwise*, not just to tolerance.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.bitmath import masked_lane_sum
 from repro.core.planner import COL_SENTINEL
 
 
@@ -36,9 +40,52 @@ def trsm_left_unit_lower_ref(l, a):
     return x.astype(a.dtype)
 
 
+def trsm_right_upper_subst_ref(a, u):
+    """Substitution-order oracle for ``trsm_right_upper`` — the exact
+    column-by-column recurrence the kernel runs, in plain jnp. Use for
+    bitwise comparisons; `trsm_right_upper_ref` (LAPACK-style) only to
+    tolerance."""
+    bs = u.shape[0]
+    iota = jax.lax.iota(jnp.int32, bs)
+    x = jnp.zeros_like(a)
+
+    def col(c, x):
+        ucol = jnp.where(iota < c, u[:, c], 0.0)
+        acc = jnp.dot(x, ucol, preferred_element_type=jnp.float32)
+        return x.at[:, c].set(((a[:, c] - acc) / u[c, c]).astype(a.dtype))
+
+    return jax.lax.fori_loop(0, bs, col, x)
+
+
+def trsm_left_unit_lower_subst_ref(l, a):
+    """Substitution-order oracle for ``trsm_left_unit_lower`` (row-by-row
+    forward recurrence); bitwise counterpart of the kernel."""
+    bs = l.shape[0]
+    iota = jax.lax.iota(jnp.int32, bs)
+    x = jnp.zeros_like(a)
+
+    def row(r, x):
+        lrow = jnp.where(iota < r, l[r, :], 0.0)
+        acc = jnp.dot(lrow, x, preferred_element_type=jnp.float32)
+        return x.at[r, :].set((a[r, :] - acc).astype(a.dtype))
+
+    return jax.lax.fori_loop(0, bs, row, x)
+
+
 def spmv_ell_ref(cols, vals, x):
-    """Row-major ELL SpMV with sentinel-padded columns."""
+    """Row-major ELL SpMV with sentinel-padded columns — fixed lane-order
+    accumulation (bit-deterministic, matches the Pallas kernel)."""
     n = x.shape[0]
     xg = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
     gathered = xg[jnp.minimum(cols, n)]
-    return jnp.sum(jnp.where(cols < COL_SENTINEL, vals * gathered, 0.0), axis=1)
+    return masked_lane_sum(cols, vals, gathered, COL_SENTINEL)
+
+
+def tri_solve_wavefront_ref(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
+                            u_rhs_idx, out_perm, b):
+    """Fused wavefront triangular solve, pure jnp (bitwise kernel oracle)."""
+    from repro.core.triangular import wavefront_sweeps_jnp
+
+    return wavefront_sweeps_jnp(
+        l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag, u_rhs_idx, out_perm, b
+    ).astype(b.dtype)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bitmath import masked_lane_sum
 from repro.core.planner import COL_SENTINEL
 
 
@@ -24,8 +25,7 @@ def _kernel(cols_ref, vals_ref, x_ref, o_ref):
     n = x.shape[0]
     idx = jnp.minimum(cols, n - 1)
     gathered = x[idx]
-    mask = cols < COL_SENTINEL
-    o_ref[...] = jnp.sum(jnp.where(mask, vals * gathered, 0.0), axis=1).astype(o_ref.dtype)
+    o_ref[...] = masked_lane_sum(cols, vals, gathered, COL_SENTINEL).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused L-then-U wavefront triangular solve.
+
+Applies the whole preconditioner M^{-1} = (LU)^{-1} in ONE kernel launch:
+both level-scheduled substitution sweeps run back-to-back over the
+level-major plan arrays (see ``repro.core.triangular.TriangularPlan``),
+with the sweep vector resident the entire time (at the benchmark sizes the
+factors fit comfortably in VMEM: 16k rows x ~9 lanes of f32 < 1 MiB).
+
+Per wavefront the kernel does one ``x[cols]`` gather, one masked
+lane-ordered reduction, and one contiguous ``dynamic_update_slice`` — no
+row gathers, no scatters. The kernel body deliberately *shares* its
+implementation with the jnp reference (``wavefront_sweeps_jnp``, all
+reductions via ``masked_lane_sum``) so the two cannot drift: bit-identity
+with the sequential-order solve is enforced by construction and asserted
+against an independent NumPy substitution oracle in the tests.
+
+Caveat: this container runs the kernel in interpret mode
+(``REPRO_PALLAS_INTERPRET=1``, the default). The compiled TPU lowering
+(``interpret=False``: ``lax.scan`` over the stacked level arrays with
+dynamic VMEM gathers + ``dynamic_update_slice``) has not been exercised on
+real hardware yet — see ROADMAP. ``REPRO_DISABLE_PALLAS=1`` falls back to
+the jnp path everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(l_cols_ref, l_vals_ref, l_rhs_idx_ref, u_cols_ref, u_vals_ref,
+            u_diag_ref, u_rhs_idx_ref, out_perm_ref, b_ref, o_ref):
+    from repro.core.triangular import wavefront_sweeps_jnp
+
+    o_ref[...] = wavefront_sweeps_jnp(
+        l_cols_ref[...], l_vals_ref[...], l_rhs_idx_ref[...],
+        u_cols_ref[...], u_vals_ref[...], u_diag_ref[...],
+        u_rhs_idx_ref[...], out_perm_ref[...], b_ref[...],
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
+                        u_rhs_idx, out_perm, b, *, interpret=True):
+    """x = (LU)^{-1} b over level-major plan arrays.
+
+    ``l_cols``/``l_vals``: (nl_lev, maxr_l, WL) slot-space columns + values;
+    ``u_*`` analogous for the backward sweep; ``*_rhs_idx`` are the
+    precomputed RHS gathers; ``out_perm`` maps rows to U-sweep slots;
+    ``b``: (n,). Returns x with the same dtype as ``b``.
+    """
+    n = b.shape[0]
+    args = (l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
+            u_rhs_idx, out_perm, b)
+    return pl.pallas_call(
+        _kernel,
+        in_specs=[pl.BlockSpec(a.shape, lambda *_, s=a.shape: (0,) * len(s))
+                  for a in args],
+        out_specs=pl.BlockSpec((n,), lambda *_: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=interpret,
+    )(*args)

@@ -12,17 +12,15 @@ import math
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+
+from repro.compat import make_mesh
 
 
 def _mesh(shape, axes):
     n = math.prod(shape)
     devs = jax.devices()
     assert len(devs) >= n, f"need {n} devices, have {len(devs)} (set XLA_FLAGS)"
-    return Mesh(
-        np.asarray(devs[:n]).reshape(shape), axes,
-        axis_types=(AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(np.asarray(devs[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -26,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..models.transformer import layer_forward

@@ -11,8 +11,8 @@ def main():
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType, Mesh
 
+    from repro.compat import make_mesh
     from repro.configs import get_config
     from repro.models.transformer import init_stacked_layers, stack_forward
     from repro.train.pipeline import make_pipelined_forward, pipeline_bubble_fraction
@@ -21,7 +21,7 @@ def main():
     cfg = dataclasses.replace(cfg, n_layers=8, q_chunk=32, kv_chunk=32, remat="none")
     devs = jax.devices()
     assert len(devs) == 4
-    mesh = Mesh(np.asarray(devs), ("pipe",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh(np.asarray(devs), ("pipe",))
 
     key = jax.random.PRNGKey(0)
     layers = init_stacked_layers(key, cfg)

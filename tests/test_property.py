@@ -1,5 +1,8 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import matgen, numeric_ilu_ref, pilu1_symbolic, symbolic_ilu_k
