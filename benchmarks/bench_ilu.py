@@ -187,6 +187,55 @@ def solver_engine(quick=True, n_rhs=4):
     }
 
 
+def factorization(quick=True, sizes=None, k=1):
+    """PR-2 tentpole metrics: the plan→compile→execute factorization
+    pipeline on 2-D Poisson at n∈{4k,16k} (quick: {1k,4k}).
+
+    Per size: vectorized symbolic, FactorPlan build, wavefront numeric
+    engine (first call = includes the one-time jit; steady = what every
+    refactorization of the same structure costs), and the sequential
+    oracle for the speedup ratio + the bitwise check. Serialized by
+    ``run.py --emit-json`` into BENCH_factor.json.
+    """
+    from repro.core import poisson_2d
+    from repro.core.factor_plan import build_factor_plan
+
+    if sizes is None:
+        sizes = (32, 64) if quick else (64, 128)  # nx; n = nx^2
+    out = {"bench": "factorization", "k": k, "cases": []}
+    for nx in sizes:
+        a = poisson_2d(nx)
+        t0 = time.perf_counter()
+        pat = pilu1_symbolic(a) if k == 1 else symbolic_ilu_k(a, k)
+        t1 = time.perf_counter()
+        plan = build_factor_plan(a, pat)
+        t2 = time.perf_counter()
+        plan.factorize()  # first call: one-time engine jit
+        t3 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            vals = plan.factorize()
+        t4 = time.perf_counter()
+        t5 = time.perf_counter()
+        want = numeric_ilu_ref(a, pat)
+        t6 = time.perf_counter()
+        steady = (t4 - t3) / reps
+        out["cases"].append({
+            "n": a.n, "nnz": a.nnz, "fill_nnz": pat.nnz,
+            "rounds": plan.n_rounds, "max_ops": plan.max_ops,
+            "symbolic_seconds": t1 - t0,
+            "plan_build_seconds": t2 - t1,
+            "numeric_first_seconds": t3 - t2,  # includes one-time jit
+            "numeric_steady_seconds": steady,
+            "oracle_numeric_seconds": t6 - t5,
+            "steady_speedup_vs_oracle": (t6 - t5) / max(steady, 1e-9),
+            "bitwise_equal_oracle": bool(
+                np.array_equal(vals.view(np.int32), want.view(np.int32))
+            ),
+        })
+    return out
+
+
 def fig5_e40r3000(quick=True):
     """Fig 5: driven-cavity surrogate — parallel ILU(3)/ILU(6) both finish
     fast; ILU(6) is far more expensive sequentially."""

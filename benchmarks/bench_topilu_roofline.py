@@ -5,10 +5,10 @@ Runs in a subprocess with simulated devices (device count locked at jax
 init). For each (band_rows, broadcast) variant it:
 
   * lowers the shard_map factorization on a D-device ring,
-  * extracts per-band-step collective bytes from the compiled HLO
-    (the band loop is a single `while`; XLA cost_analysis counts the body
-    once, so totals are body-costs x n_bands — exact here since every
-    band step is identical),
+  * extracts per-superstep collective bytes from the compiled HLO
+    (the superstep loop is a single `while`; XLA cost_analysis counts the
+    body once, so totals are body-costs x n_supersteps — exact here since
+    every superstep issues one identically-shaped collective),
   * combines with exact host-side op counts (planner) into the three
     roofline terms on TPU v5e constants,
   * MEASURES wall time on the simulated devices for a small matrix
@@ -81,9 +81,9 @@ def main():
         for broadcast in ("psum", "ring"):
             lowered, plan = lower_topilu(a, pat, band_rows, mesh, broadcast=broadcast)
             compiled = lowered.compile()
-            # per-step collective bytes (body counted once) x n_bands
+            # per-superstep collective bytes (loop body counted once) x n_sup
             step_coll = sum(collective_bytes_per_device(compiled.as_text()).values())
-            coll_bytes = step_coll * plan.n_bands
+            coll_bytes = step_coll * plan.n_supersteps
             coll_s = coll_bytes / LINK_BW
             comp_s = flops / D / PEAK_FLOPS
             t0 = time.perf_counter()

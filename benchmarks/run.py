@@ -111,6 +111,26 @@ def bench_bitcompat(rows, quick=True):
     rows.append(("paper.bitcompat_banded", us, f"bitwise_equal={eq}"))
 
 
+def bench_factorization(rows, quick=True):
+    """Plan→compile→execute factorization pipeline (PR-2 tentpole).
+
+    Always measures the full sizes (n∈{4k,16k}) so BENCH_factor.json
+    records the acceptance numbers; ``--full`` only raises solver sizes.
+    """
+    from benchmarks import bench_ilu as B
+
+    m = B.factorization(quick=False)  # n in {4096, 16384}
+    for c in m["cases"]:
+        rows.append((f"factor.symbolic_n{c['n']}", c["symbolic_seconds"] * 1e6,
+                     f"fill_nnz={c['fill_nnz']}"))
+        rows.append((f"factor.plan_build_n{c['n']}", c["plan_build_seconds"] * 1e6,
+                     f"rounds={c['rounds']}"))
+        rows.append((f"factor.numeric_n{c['n']}", c["numeric_steady_seconds"] * 1e6,
+                     f"speedup_vs_oracle={c['steady_speedup_vs_oracle']:.1f} "
+                     f"bitwise={c['bitwise_equal_oracle']}"))
+    return m
+
+
 def bench_solver(rows, quick=True):
     """Device-resident preconditioned Krylov engine (PR-1 tentpole)."""
     from benchmarks import bench_ilu as B
@@ -144,6 +164,7 @@ def main() -> None:
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
     rows = []
     solver_metrics = bench_solver(rows, quick)
+    factor_metrics = bench_factorization(rows, quick)
     bench_bitcompat(rows, quick)
     bench_kernels(rows, quick)
     bench_paper_tables(rows, quick)
@@ -151,9 +172,18 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if emit_json:
+        # BENCH_solver.json-style path keeps the PR-1 shape; any other path
+        # (e.g. BENCH_factor.json) gets the factorization trajectory.
+        if "factor" in os.path.basename(emit_json):
+            payload = {"bench": "factorization", "quick": quick,
+                       "metrics": factor_metrics,
+                       "solver_engine": solver_metrics}
+        else:
+            payload = {"bench": "solver_engine", "quick": quick,
+                       "metrics": solver_metrics,
+                       "factorization": factor_metrics}
         with open(emit_json, "w") as f:
-            json.dump({"bench": "solver_engine", "quick": quick,
-                       "metrics": solver_metrics}, f, indent=2)
+            json.dump(payload, f, indent=2)
         print(f"wrote {emit_json}", file=sys.stderr)
 
 

@@ -6,8 +6,15 @@
 
 Backends:
   * ``oracle``   — sequential NumPy (the paper's sequential algorithm).
-  * ``jax``      — single-device banded JAX engine (bit-compatible).
-  * ``topilu``   — multi-device shard_map TOP-ILU (bit-compatible).
+  * ``jax``      — single-device wavefront engine over a cached
+                   ``FactorPlan`` (bit-compatible; ``band_rows`` ignored).
+  * ``topilu``   — multi-device shard_map TOP-ILU over the band superstep
+                   schedule (bit-compatible; bands of ``band_rows`` rows).
+
+The whole ``factorize → precond → solve`` pipeline is plan→compile→execute
+(DESIGN.md §3): each stage's plan and compiled engine are cached — the
+``FactorPlan`` on the matrix, the ``PrecondApply`` on the factorization —
+so repeated use retraces nothing.
 """
 from __future__ import annotations
 
@@ -80,18 +87,12 @@ def ilu(
     if backend == "oracle":
         vals = numeric_ilu_ref(a, pattern)
     elif backend == "jax":
-        from .planner import make_plan
-        from .numeric_jax import factorize_single_device, plan_device_arrays
-        from .top_ilu import _values_to_csr_order
+        from .factor_plan import factor_plan_for
 
-        plan = make_plan(a, pattern, band_rows=band_rows, n_devices=1)
-        arrays = plan_device_arrays(plan)
-        run = factorize_single_device(plan)
-        out = run(
-            arrays["vals"], arrays["cols"], arrays["pivot_start"], arrays["band_of_row"],
-            arrays["intra_start"], arrays["intra_count"], arrays["cols_all"], arrays["dpos_all"],
-        )
-        vals = _values_to_csr_order(plan, pattern, np.asarray(out))
+        # plan + compiled engine are memoized on the matrix (FactorPlan);
+        # repeated/updated-value factorizations skip planning and compile
+        plan = factor_plan_for(a, pattern)
+        vals = plan.factorize(a)
     elif backend == "topilu":
         from .top_ilu import topilu_numeric
 

@@ -22,6 +22,37 @@ import jax
 import jax.numpy as jnp
 
 
+def _register_barrier_batching() -> None:
+    """Give ``optimization_barrier`` a vmap batching rule (jax<=0.4.3x ships
+    none, which breaks every barriered reduction under ``vmap`` — e.g. the
+    batched-RHS solver on the jnp fallback path). The barrier is an identity
+    on values and shapes, so batching is just applying it to the batched
+    operands with the dims passed through unchanged."""
+    try:
+        from jax.interpreters import batching
+        from jax._src.lax import lax as _lax_src
+
+        prim = getattr(jax.lax, "optimization_barrier_p", None) or getattr(
+            _lax_src, "optimization_barrier_p", None
+        )
+        if prim is None or prim in batching.primitive_batchers:
+            return
+
+        def _rule(args, dims, **params):
+            outs = prim.bind(*args, **params)
+            if not prim.multiple_results:
+                outs, dims = (outs,), dims[0] if isinstance(dims, tuple) else dims
+                return outs[0], dims
+            return outs, dims
+
+        batching.primitive_batchers[prim] = _rule
+    except Exception:  # pragma: no cover — newer jax may rename internals
+        pass
+
+
+_register_barrier_batching()
+
+
 _UNROLL = 16  # lanes unrolled per graph node; wider rows scan over chunks
 
 

@@ -1,199 +1,245 @@
-"""Device-side numeric factorization (Phase II) — band/frontier engine.
+"""Device-side numeric factorization (Phase II) — wavefront + superstep engines.
 
 All functions here are pure JAX and shape-static; they implement exactly the
-oracle's arithmetic (divide; multiply-then-subtract; ascending pivots) so the
-result is **bit-compatible** with :func:`repro.core.numeric_ref.numeric_ilu_ref`.
+oracle's arithmetic (divide; barriered multiply-then-subtract; ascending
+pivots per row) so the result is **bit-compatible** with
+:func:`repro.core.numeric_ref.numeric_ilu_ref`.
 
-Layout: rows live in band-major tensors ``vals (rows, W)``; a *pivot-band
-buffer* ``(R, W)`` carries the currently-finishing band (this is the object
-the paper pipelines around the ring, Fig 4). Gathers into pivot rows use
-``searchsorted`` on the static column structure instead of precomputed
-scatter maps — O(W log W) integer work per pivot in exchange for an O(nnz)
-(not O(nnz*W)) plan footprint.
+Two executors over the same plan-layer contracts (DESIGN.md §3):
 
-The same body runs single-device (``axis_name=None``) or under
-``shard_map`` with each device holding its round-robin shard of bands
-(device-major layout from the planner). The finished band is broadcast with
-either a masked ``psum`` (XLA's ring all-reduce — the hardware realization
-of the paper's aggregate-bandwidth pipeline) or an explicit ``ppermute``
-directed ring (paper-faithful message path; ``broadcast='ring'``).
+* :func:`factor_wavefront_sweeps_jnp` / :func:`make_wavefront_factorizer` —
+  the single-device fast path. One ``lax.scan`` over the *pivot-op*
+  wavefronts of a :class:`repro.core.factor_plan.FactorPlan`: each round
+  applies one pivot to every row whose turn has come (all independent by
+  construction), through the precomputed flat destination-lane map — no
+  ``searchsorted``, no per-band sequential sweep, and padded work bounded
+  by ``n_rounds * max_ops * W`` (exact op count, robust to skewed
+  patterns) instead of the old ``n_bands * n_pad * max_piv`` dense partial
+  reductions.
+* :func:`make_superstep_factorizer` — the banded TOP-ILU executor (paper
+  §IV), re-emitted over the *band superstep schedule*: bands whose
+  dependencies are satisfied factor concurrently (vmapped per device over
+  its members of the superstep), each band *pulling* its inter-band pivot
+  rows from the replicated finalized values. One collective per superstep
+  (an ``all_gather`` of the bands each device finished — ``broadcast=
+  "psum"`` is kept as an alias — or an explicit ``ppermute`` directed ring,
+  the paper's Fig-4 pipeline) replaces one broadcast per band. Pivot order
+  within a row
+  is ascending (earlier-band columns precede in-band columns), so the pull
+  formulation is bitwise identical to the oracle by construction.
+
+The same superstep body runs single-device (``axis_name=None``) or under
+``shard_map`` with each device computing the bands it owns round-robin
+(static load balancing, §IV-D).
 """
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .planner import COL_SENTINEL, NumericPlan
+from .planner import NumericPlan
+
+_PALLAS_DISABLED = os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1"
 
 
-def _apply_one_pivot(x, jcols, pos, valid, band_start, buf_vals, cols_all, dpos_all):
-    """Apply the pivot at ELL position ``pos`` of row ``x``; the pivot row is
-    read from the band buffer. Bitwise-identical to the oracle's update."""
-    W = x.shape[0]
-    pos_c = jnp.minimum(pos, W - 1)
-    i = jcols[pos_c].astype(jnp.int32)  # global pivot column == pivot row id
-    i_safe = jnp.where(valid & (i < COL_SENTINEL), i, band_start)
-    li = i_safe - band_start  # local row inside the buffer
-    piv = buf_vals[li, dpos_all[i_safe]]
-    l = x[pos_c] / piv
-    icols = cols_all[i_safe]  # (W,) static structure of the pivot row
-    ivals = buf_vals[li]  # (W,) current values of the pivot row
-    tail = (icols > i_safe) & (icols < COL_SENTINEL) & valid
-    dst = jnp.searchsorted(jcols, icols).astype(jnp.int32)
-    dst_c = jnp.minimum(dst, W - 1)
-    hit = tail & (jcols[dst_c] == icols)
-    contrib = jnp.where(hit, l * ivals, jnp.float32(0))
-    # multiply-then-subtract; masked lanes scatter out of bounds and drop
-    x = x.at[jnp.where(hit, dst, W)].add(-contrib, mode="drop")
-    x = x.at[pos_c].set(jnp.where(valid, l, x[pos_c]))
-    return x
+# --------------------------------------------------------------------------
+# row-wavefront executor (single device)
+# --------------------------------------------------------------------------
+def factor_wavefront_sweeps_jnp(op_row, op_lane, op_piv, op_dlane, op_dst,
+                                dst_flat, a_vals_ext):
+    """Round-major pivot-op wavefront factorization (pure jnp reference).
 
+    The Pallas kernel (`repro.kernels.panel_update.factor_wavefront`) runs
+    this exact computation on values read from refs; both are bit-identical
+    because they share this implementation.
 
-def _reduce_row_against_band(x, jcols, start, count, max_pivots, band_start, buf_vals, cols_all, dpos_all):
-    """Partially reduce one row against the (finished) band in ``buf_vals``."""
-
-    def body(s, x):
-        return _apply_one_pivot(
-            x, jcols, start + s, s < count, band_start, buf_vals, cols_all, dpos_all
-        )
-
-    return lax.fori_loop(0, max_pivots, body, x)
-
-
-def finish_band(buf_vals, buf_cols, band_start, intra_start, intra_count, max_intra, cols_all, dpos_all):
-    """Completely reduce a band, rows top-down (the frontier step, Def 4.1).
-
-    ``buf_vals`` must already be partially reduced against all earlier
-    bands; rows use *earlier rows of the same buffer* as pivot rows.
+    ``a_vals_ext``: (n+1, W) A-values on the pattern + zero scratch row;
+    schedule arrays as in :class:`repro.core.factor_plan.FactorPlan`.
+    Each round applies at most one pivot per row (rows distinct within a
+    round by construction), so the per-round read-modify-write on the
+    value array is conflict-free. Returns the factored (n, W) values.
     """
-    R = buf_vals.shape[0]
+    NR, MO = op_row.shape
+    n = a_vals_ext.shape[0] - 1
+    idx = jnp.arange(MO)
 
-    def row_body(r, buf):
-        x = _reduce_row_against_band(
-            buf[r], buf_cols[r], intra_start[r], intra_count[r],
-            max_intra, band_start, buf, cols_all, dpos_all,
-        )
-        return buf.at[r].set(x)
+    def round_step(vals, inp):
+        rows, lanes, pivs, dlanes, ids = inp
+        valid = rows < n  # padding ops target the scratch row
+        x = vals[rows]  # (MO, W)
+        pv = vals[pivs]  # (MO, W) — pivot rows, final since earlier rounds
+        pdiag = jnp.where(valid, pv[idx, dlanes], jnp.float32(1))
+        xp = x[idx, lanes]
+        l = xp / pdiag
+        # multiply-then-subtract, product rounded to f32 before the add
+        # (no FMA contraction) — the oracle's exact arithmetic
+        contrib = lax.optimization_barrier(l[:, None] * pv)
+        dd = dst_flat[ids]  # (MO, W); pad op -> all lanes dropped
+        x = jax.vmap(lambda xr, dr, cr: xr.at[dr].add(-cr, mode="drop"))(x, dd, contrib)
+        x = x.at[idx, lanes].set(jnp.where(valid, l, xp))
+        return vals.at[rows].set(x), None
 
-    return lax.fori_loop(0, R, row_body, buf_vals)
+    vals, _ = lax.scan(
+        round_step, a_vals_ext, (op_row, op_lane, op_piv, op_dlane, op_dst)
+    )
+    return vals[:n]
 
 
-def make_banded_factorizer(
+def make_wavefront_factorizer(plan, use_pallas: bool = True):
+    """Compiled ``(n+1, W) -> (n, W)`` factorizer over a FactorPlan.
+
+    The schedule arrays live on device (cached on the plan); the returned
+    callable is jitted once and reused for every refactorization of the
+    same structure. ``use_pallas`` routes through the fused Pallas kernel
+    (`repro.kernels.ops.factor_wavefront`); the jnp path is the
+    bit-identical reference.
+    """
+    dev = plan.device_arrays()
+    if use_pallas and not _PALLAS_DISABLED:
+        from repro.kernels import ops  # deferred: keep core importable alone
+
+        def _raw(vals):
+            return ops.factor_wavefront(
+                dev["op_row"], dev["op_lane"], dev["op_piv"],
+                dev["op_dlane"], dev["op_dst"], dev["dst_flat"], vals,
+            )
+    else:
+        def _raw(vals):
+            return factor_wavefront_sweeps_jnp(
+                dev["op_row"], dev["op_lane"], dev["op_piv"],
+                dev["op_dlane"], dev["op_dst"], dev["dst_flat"], vals,
+            )
+
+    return jax.jit(lambda vals: _raw(jnp.asarray(vals, jnp.float32)))
+
+
+# --------------------------------------------------------------------------
+# band superstep executor (TOP-ILU, single- or multi-device)
+# --------------------------------------------------------------------------
+def make_superstep_factorizer(
     plan: NumericPlan,
     axis_name: Optional[str] = None,
     broadcast: str = "psum",
 ):
-    """Build the jit-able band/frontier numeric factorization body.
+    """Build the jit-able band-superstep numeric factorization body.
 
-    Arguments of the returned function (all *device-local*, device-major band
-    order, except the two replicated structure arrays):
+    Arguments of the returned function (all replicated; device identity
+    comes from ``lax.axis_index`` under ``shard_map``):
 
-    vals         (Bl*R, W) f32  — A values on the filled pattern (shard)
-    cols         (Bl*R, W) i32  — column structure (shard)
-    pivot_start  (Bl*R, B+1) i32
-    band_of_row  (Bl*R,) i32
-    intra_start  (Bl*R,) i32
-    intra_count  (Bl*R,) i32
-    cols_all     (n_pad, W) i32 — replicated
-    dpos_all     (n_pad,) i32   — replicated
+    vals       (n_pad+1, W) f32 — A values on the pattern + scratch row
+    sched      (n_sup, D, MPD) i32 — superstep schedule, band ids, B-padded
+    piv_rows   (n_pad, MP) i32 — pivot row per (row, pivot lane)
+    piv_dlane  (n_pad, MP) i32 — pivot row's diagonal lane
+    piv_dst    (n_pad, MP, W) i32 — destination lanes ([0, W]; W = drop)
+    n_piv      (n_pad,) i32 — pivots per row (diag position)
 
-    Returns the factorized values shard (Bl*R, W).
+    Returns the fully factored values (n_pad, W), replicated.
     """
     R = plan.band_rows
     B = plan.n_bands
     D = plan.n_devices if axis_name is not None else 1
     W = plan.width
-    Bl = B // D
-    assert broadcast in ("psum", "ring")
+    MP = plan.max_piv
+    n_pad = plan.n_pad
+    n_sup = plan.n_supersteps
+    if broadcast == "psum":  # historical alias: the XLA-collective fast path
+        broadcast = "gather"
+    assert broadcast in ("gather", "ring")
 
-    def factorize(vals, cols, pivot_start, band_of_row, intra_start, intra_count, cols_all, dpos_all):
+    def factorize(vals, sched, piv_rows, piv_dlane, piv_dst, n_piv):
         me = lax.axis_index(axis_name) if axis_name is not None else jnp.int32(0)
-        vals3 = vals.reshape(Bl, R, W)
-        cols3 = cols.reshape(Bl, R, W)
-        istart3 = intra_start.reshape(Bl, R)
-        icount3 = intra_count.reshape(Bl, R)
 
-        def band_step(p, vals3):
-            slot = p // D
-            owner = p % D
-            band_start = (p * R).astype(jnp.int32)
-            # --- finish band p (runs on every device; only the owner's is real)
-            buf = lax.dynamic_slice(vals3, (slot, 0, 0), (1, R, W))[0]
-            bcols = lax.dynamic_slice(cols3, (slot, 0, 0), (1, R, W))[0]
-            ist = lax.dynamic_slice(istart3, (slot, 0), (1, R))[0]
-            icn = lax.dynamic_slice(icount3, (slot, 0), (1, R))[0]
-            buf = finish_band(
-                buf, bcols, band_start, ist, icn, plan.max_intra_pivots, cols_all, dpos_all
-            )
-            mine = jnp.equal(me, owner)
+        def superstep(s, vals):
+            all_bands = lax.dynamic_slice_in_dim(sched, s, 1, axis=0)[0]  # (D, MPD)
+            my_bands = lax.dynamic_index_in_dim(all_bands, me, axis=0, keepdims=False)
+
+            def do_band(b):
+                live = b < B
+                base = (jnp.where(live, b, 0) * R).astype(jnp.int32)
+                rows = base + jnp.arange(R, dtype=jnp.int32)
+                buf = vals[rows]  # (R, W)
+
+                def row_step(r, buf):
+                    x = buf[r]
+                    j = base + r
+
+                    def piv_step(p, x):
+                        i = piv_rows[j, p]
+                        valid = p < n_piv[j]
+                        i_s = jnp.minimum(i, n_pad - 1)
+                        li = i_s - base
+                        in_band = (li >= 0) & (li < R)
+                        # pull: in-band pivots from the buffer being built,
+                        # earlier bands from the replicated finalized values
+                        pvals = jnp.where(in_band, buf[jnp.clip(li, 0, R - 1)], vals[i_s])
+                        piv = jnp.where(valid, pvals[piv_dlane[j, p]], jnp.float32(1))
+                        xp = x[jnp.minimum(p, W - 1)]
+                        l = xp / piv
+                        contrib = lax.optimization_barrier(l * pvals)
+                        x = x.at[piv_dst[j, p]].add(-contrib, mode="drop")
+                        return x.at[jnp.minimum(p, W - 1)].set(jnp.where(valid, l, xp))
+
+                    x = lax.fori_loop(0, MP, piv_step, x)
+                    return buf.at[r].set(x)
+
+                buf = lax.fori_loop(0, R, row_step, buf)
+                return jnp.where(live, buf, jnp.float32(0))
+
+            # bands of a superstep are independent; a fori (not vmap — the
+            # optimization_barrier has no batching rule) fills this device's
+            # members, while other devices process theirs concurrently
+            def band_loop(g, bufs):
+                return bufs.at[g].set(do_band(my_bands[g]))
+
+            bufs = lax.fori_loop(
+                0, my_bands.shape[0], band_loop,
+                jnp.zeros((my_bands.shape[0], R, W), jnp.float32),
+            )  # (MPD, R, W)
+
             if axis_name is not None:
-                masked = jnp.where(mine, buf, jnp.zeros_like(buf))
-                if broadcast == "psum":
-                    buf = lax.psum(masked, axis_name)
-                else:  # explicit directed ring — the paper's pipeline (Fig 4)
+                if broadcast == "gather":
+                    # XLA's ring all-gather: each device contributes exactly
+                    # its finished bands — no zero-padded (D, ...) temporary
+                    all_bufs = lax.all_gather(bufs, axis_name)
+                else:  # explicit directed ring all-reduce — the paper's Fig-4 pipeline
+                    mine = jnp.zeros((D,) + bufs.shape, jnp.float32).at[me].set(bufs)
                     perm = [(d, (d + 1) % D) for d in range(D)]
-                    s = masked
+                    acc, cur = mine, mine
                     for _ in range(D - 1):
-                        recv = lax.ppermute(s, axis_name, perm)
-                        s = jnp.where(mine, s, recv)
-                    buf = s
-            # the owner writes the finished band back into its shard
-            upd = lax.dynamic_update_slice(vals3, buf[None], (slot, 0, 0))
-            vals3 = jnp.where(mine, upd, vals3) if axis_name is not None else upd
+                        cur = lax.ppermute(cur, axis_name, perm)
+                        acc = acc + cur
+                    all_bufs = acc
+            else:
+                all_bufs = bufs[None]
 
-            # --- partial reduction of local later rows against band p
-            flat = vals3.reshape(Bl * R, W)
-            se = lax.dynamic_slice_in_dim(pivot_start, p, 2, axis=1)
-            starts, ends = se[:, 0], se[:, 1]
-            counts = jnp.where(band_of_row > p, ends - starts, 0)
+            all_rows = jnp.where(
+                (all_bands < B)[:, :, None],
+                all_bands[:, :, None] * R + jnp.arange(R, dtype=jnp.int32),
+                jnp.int32(n_pad),  # padding bands scatter into the scratch row
+            )  # (D, MPD, R)
+            return vals.at[all_rows.reshape(-1)].set(all_bufs.reshape(-1, W))
 
-            def one(x, jcols, start, count):
-                return _reduce_row_against_band(
-                    x, jcols, start, count, plan.max_pivots_per_band,
-                    band_start, buf, cols_all, dpos_all,
-                )
-
-            flat = jax.vmap(one)(flat, cols, starts, counts)
-            return flat.reshape(Bl, R, W)
-
-        vals3 = lax.fori_loop(0, B, band_step, vals3)
-        return vals3.reshape(Bl * R, W)
+        vals = lax.fori_loop(0, n_sup, superstep, vals)
+        return vals[:n_pad]
 
     return factorize
 
 
-def factorize_single_device(plan: NumericPlan):
-    """Single-device jitted banded factorization: full arrays in, CSR-order out."""
-    fac = make_banded_factorizer(plan, axis_name=None)
-
-    @jax.jit
-    def run(vals_dm, cols_dm, pivot_start_dm, band_of_row_dm, intra_start_dm, intra_count_dm, cols_all, dpos_all):
-        return fac(
-            vals_dm, cols_dm, pivot_start_dm, band_of_row_dm,
-            intra_start_dm, intra_count_dm, cols_all, dpos_all,
-        )
-
-    return run
-
-
 def plan_device_arrays(plan: NumericPlan):
-    """Host-side: all device-major inputs for the factorizer (full, unsharded)."""
+    """Host-side: the replicated inputs of the superstep factorizer."""
     import numpy as np
 
-    dm = plan.rows_device_major
-    intra_start = plan.pivot_start[np.arange(plan.n_pad), plan.band_of_row].astype(np.int32)
-    intra_count = (plan.diag_pos - intra_start).astype(np.int32)
+    vals = np.zeros((plan.n_pad + 1, plan.width), dtype=np.float32)
+    vals[: plan.n_pad] = plan.a_vals
     return dict(
-        vals=dm(plan.a_vals),
-        cols=dm(plan.cols),
-        pivot_start=dm(plan.pivot_start),
-        band_of_row=dm(plan.band_of_row),
-        intra_start=dm(intra_start),
-        intra_count=dm(intra_count),
-        cols_all=plan.cols,
-        dpos_all=plan.diag_pos,
+        vals=vals,
+        sched=plan.superstep_bands,
+        piv_rows=plan.piv_rows,
+        piv_dlane=plan.piv_dlane,
+        piv_dst=plan.piv_dst,
+        n_piv=plan.diag_pos.astype(np.int32),
     )

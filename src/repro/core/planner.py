@@ -1,19 +1,37 @@
-"""Static band/frontier planner — the bridge from Phase I to the device.
+"""Static planning layer — the bridge from Phase I to the device.
+
+This module is the shared *plan* stage of the plan→compile→execute
+pipeline (DESIGN.md §3): every schedule the executors consume is built
+here (or from here) by the same vectorized primitives:
+
+* :func:`wavefront_schedule` — the Kahn frontier scheduler. Given a static
+  dependency edge list it groups items (rows, or bands) into level-major
+  wavefronts: everything in wave ``t`` depends only on waves ``< t``, so a
+  wave executes as one batched step. The triangular-solve plan
+  (`repro.core.triangular.TriangularPlan`), the factorization plan
+  (`repro.core.factor_plan.FactorPlan`), the vectorized symbolic frontier
+  (`repro.core.symbolic`), and the band superstep schedule below are all
+  instances of this one scheduler.
+* :func:`pivot_gather_maps` — precomputed slot-space gathers for pivot
+  application: for every (row, pivot) pair, the destination lane of each
+  pivot-row tail entry inside the reduced row. This replaces the per-pivot
+  ``searchsorted`` the numeric engines used to perform on device —
+  O(1) gathers at run time, one vectorized host pass at plan time.
 
 The paper organizes the matrix as *bands* of consecutive rows (§IV-A,
 Fig 3); the *frontier* is the last completely-reduced row (Def 4.1); bands
-are owned round-robin by nodes (static load balancing, §IV-D).
-
-On TPU everything must be static-shaped, so this planner turns a symbolic
+are owned round-robin by nodes (static load balancing, §IV-D). On TPU
+everything must be static-shaped, so :func:`make_plan` turns a symbolic
 pattern (`ILUPattern`) into a :class:`NumericPlan`:
 
 * padded ELL storage (``cols``/``diag_pos``) — static structure,
 * per-row *band pivot offsets* ``pivot_start[j, b]`` = number of entries of
   row j strictly left of column ``b*band_rows`` (clipped to the diagonal),
-  so the pivots of row j falling in band b occupy ELL positions
-  ``[pivot_start[j,b], pivot_start[j,b+1])``,
-* static trip-count bounds (``max_pivots_per_band``, ``max_intra_pivots``),
-* the device-major band permutation used to shard bands round-robin.
+* the precomputed pivot gather maps (``piv_rows``/``piv_dst``),
+* the *band superstep schedule*: band-dependency wavefronts grouped by
+  owning device, so independent bands factor concurrently and one
+  collective per superstep replaces one broadcast per band,
+* static trip-count bounds and the device-major band permutation.
 
 Because the pattern is planning output, column indices are *replicated*
 device-side rather than communicated — the paper ships 8 bytes/entry
@@ -25,13 +43,193 @@ import dataclasses
 
 import numpy as np
 
-from .sparse import CSRMatrix, ELLMatrix, ILUPattern
+from .sparse import CSRMatrix, ILUPattern
 
 #: Column sentinel for ELL padding. Must be larger than any valid column so
-#: padded rows remain sorted (device code uses ``searchsorted``).
+#: padded rows remain sorted.
 COL_SENTINEL = np.int32(2**30)
 
 
+# --------------------------------------------------------------------------
+# shared vectorized scheduling primitives
+# --------------------------------------------------------------------------
+def expand_spans(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenate ``[arange(s, s+l) for s, l in zip(starts, lens)]`` without
+    a Python loop (repeat/cumsum idiom)."""
+    starts = np.asarray(starts, dtype=np.int64)
+    lens = np.asarray(lens, dtype=np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    base = np.repeat(starts, lens)
+    cum = np.cumsum(lens)
+    within = np.arange(total, dtype=np.int64) - np.repeat(cum - lens, lens)
+    return base + within
+
+
+def wavefront_schedule(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """Vectorized Kahn frontier over ``n`` items with edges ``dst`` waits on
+    ``src``. Returns a level-major ``(n_levels, max_items)`` int32 table of
+    item ids, ``n``-padded, items ascending within each wave.
+
+    Wave ``t`` is exactly the set of items whose dependencies all resolved
+    in waves ``< t`` (equal to the classical ``level[j] = 1 +
+    max(level[deps])`` recursion), so the output matches the sequential
+    per-item computation level for level.
+    """
+    if n == 0:
+        return np.zeros((0, 1), dtype=np.int32)
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    indeg = np.bincount(dst, minlength=n).astype(np.int64)
+    order_e = np.argsort(src, kind="stable")
+    src_s, dst_s = src[order_e], dst[order_e]
+    starts = np.searchsorted(src_s, np.arange(n))
+    ends = np.searchsorted(src_s, np.arange(n) + 1)
+    level = np.zeros(n, dtype=np.int64)
+    front = np.nonzero(indeg == 0)[0]
+    lev = 0
+    assigned = 0
+    while front.size:
+        level[front] = lev
+        assigned += front.size
+        elens = ends[front] - starts[front]
+        total = int(elens.sum())
+        if total:
+            children = dst_s[expand_spans(starts[front], elens)]
+            np.subtract.at(indeg, children, 1)
+            cand = np.unique(children)
+            front = cand[indeg[cand] == 0]
+        else:
+            front = np.zeros(0, dtype=np.int64)
+        lev += 1
+    if assigned != n:  # cyclic dependencies — impossible for triangular DAGs
+        raise ValueError("dependency cycle in wavefront schedule")
+    nlev = lev
+    order = np.argsort(level, kind="stable")  # ids ascending within each level
+    counts = np.bincount(level, minlength=nlev)
+    maxr = max(int(counts.max()), 1)
+    starts = np.zeros(nlev, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:])
+    out = np.full((nlev, maxr), n, dtype=np.int32)  # n = scratch id
+    rank = np.arange(n) - starts[level[order]]
+    out[level[order], rank] = order
+    return out
+
+
+def wavefront_schedule_ell(dep_cols: np.ndarray, n: int) -> np.ndarray:
+    """Wavefronts from sentinel-padded ELL dependency columns (lanes with
+    ``dep_cols >= n`` carry no dependency)."""
+    if n == 0:
+        return np.zeros((0, 1), dtype=np.int32)
+    valid = dep_cols < n
+    dst, lane = np.nonzero(valid)
+    src = dep_cols[dst, lane].astype(np.int64)
+    return wavefront_schedule(src, dst, n)
+
+
+def ell_from_pattern(pattern: ILUPattern, a: CSRMatrix, n_rows: int):
+    """Vectorized scatter of A onto the filled pattern as padded ELL.
+
+    Returns ``(cols, vals, diag_pos, row_len)`` with ``n_rows >= pattern.n``
+    rows; rows past ``pattern.n`` are identity (unit diagonal) so divisions
+    stay finite. ``cols`` is COL_SENTINEL-padded.
+    """
+    n = pattern.n
+    rowlen = np.diff(pattern.indptr).astype(np.int64)
+    W = max(int(rowlen.max(initial=0)), 1)
+    row_of = np.repeat(np.arange(n, dtype=np.int64), rowlen)
+    pos = np.arange(pattern.nnz, dtype=np.int64) - pattern.indptr[row_of]
+    cols = np.full((n_rows, W), COL_SENTINEL, dtype=np.int32)
+    vals = np.zeros((n_rows, W), dtype=np.float32)
+    cols[row_of, pos] = pattern.indices
+    # locate every A entry inside the (sorted, row-major) pattern
+    big = np.int64(n_rows + 1)
+    pkeys = row_of * big + pattern.indices.astype(np.int64)
+    a_row_of = np.repeat(np.arange(n, dtype=np.int64), np.diff(a.indptr))
+    akeys = a_row_of * big + a.indices.astype(np.int64)
+    apos = np.searchsorted(pkeys, akeys)
+    assert np.array_equal(pkeys[apos], akeys), "A entry missing from pattern"
+    vals[a_row_of, pos[apos]] = a.data
+    diag_pos = np.zeros(n_rows, dtype=np.int32)
+    row_len = np.zeros(n_rows, dtype=np.int32)
+    diag_pos[:n] = pattern.diag_ptr
+    row_len[:n] = rowlen
+    if n_rows > n:
+        pad = np.arange(n, n_rows)
+        cols[pad, 0] = pad
+        vals[pad, 0] = 1.0
+        row_len[pad] = 1
+    return cols, vals, diag_pos, row_len, pos[apos]
+
+
+def pivot_gather_maps(cols: np.ndarray, diag_pos: np.ndarray):
+    """Precomputed pivot gathers for the numeric engines.
+
+    For every (row j, pivot lane p < diag_pos[j]) the pivot row id is the
+    column value itself; ``dst[j, p, w]`` is the lane of row j that receives
+    pivot row i's tail entry ``cols[i, w]`` (``W`` = dropped: not in row j's
+    pattern, not strictly right of the pivot, or a padded lane).
+
+    Returns ``(piv_rows (nr, MP) int32 [nr = scratch], piv_dlane (nr, MP)
+    int32, dst (nr, MP, W) int32 in [0, W])``.
+    """
+    nr, W = cols.shape
+    MP = max(int(diag_pos.max(initial=0)), 1)
+    lanes = np.arange(MP)[None, :]
+    pvalid = lanes < diag_pos[:, None]  # (nr, MP)
+    piv_rows = np.where(pvalid, cols[:, :MP], nr).astype(np.int32)
+    i_safe = np.minimum(piv_rows, nr - 1).astype(np.int64)
+    piv_dlane = np.where(pvalid, diag_pos[i_safe], 0).astype(np.int32)
+    # flat sorted keys of all valid ELL entries + their lane index
+    valid = cols < COL_SENTINEL
+    row_of, lane_of = np.nonzero(valid)
+    big = np.int64(nr + 1)
+    flat_keys = row_of.astype(np.int64) * big + cols[row_of, lane_of].astype(np.int64)
+    # queries: every tail entry of every pivot row, keyed into the reduced row
+    pivcols = cols[i_safe].astype(np.int64)  # (nr, MP, W)
+    tail = pvalid[:, :, None] & (pivcols > i_safe[:, :, None]) & (pivcols < COL_SENTINEL)
+    qkeys = np.where(
+        tail, np.arange(nr, dtype=np.int64)[:, None, None] * big + pivcols, np.int64(-1)
+    )
+    qpos = np.searchsorted(flat_keys, qkeys.ravel())
+    qpos_c = np.minimum(qpos, len(flat_keys) - 1)
+    hit = (qpos < len(flat_keys)) & (flat_keys[qpos_c] == qkeys.ravel())
+    dst = np.where(hit, lane_of[qpos_c], W).reshape(nr, MP, W).astype(np.int32)
+    return piv_rows, piv_dlane, dst
+
+
+def pivot_dst_flat(cols: np.ndarray, o_row: np.ndarray, o_piv: np.ndarray) -> np.ndarray:
+    """Flat per-op destination-lane map for the pivot-op schedule.
+
+    For op ``t`` (reduce row ``o_row[t]`` against pivot row ``o_piv[t]``),
+    ``out[t, w]`` is the lane of the reduced row receiving pivot-row tail
+    entry ``cols[o_piv[t], w]`` (``W`` = dropped: not in the reduced row's
+    pattern, not strictly right of the pivot, or a padded lane). The last
+    row (index ``n_ops``) is the all-dropped pad op. O(nnz(L)·W) memory —
+    exact op count, no dense (rows × max-pivots) blowup.
+    """
+    n, W = cols.shape
+    o_row = np.asarray(o_row, np.int64)
+    o_piv = np.asarray(o_piv, np.int64)
+    n_ops = o_row.size
+    valid = cols < COL_SENTINEL
+    row_idx, lane_idx = np.nonzero(valid)
+    big = np.int64(n + 1)
+    flat_keys = row_idx.astype(np.int64) * big + cols[row_idx, lane_idx].astype(np.int64)
+    pivcols = cols[o_piv].astype(np.int64)  # (n_ops, W)
+    tail = (pivcols > o_piv[:, None]) & (pivcols < COL_SENTINEL)
+    qkeys = np.where(tail, o_row[:, None] * big + pivcols, np.int64(-1))
+    qpos = np.searchsorted(flat_keys, qkeys.ravel())
+    qpos_c = np.minimum(qpos, max(len(flat_keys) - 1, 0))
+    hit = (qpos < len(flat_keys)) & (flat_keys[qpos_c] == qkeys.ravel())
+    dst = np.where(hit, lane_idx[qpos_c], W).reshape(n_ops, W).astype(np.int32)
+    return np.concatenate([dst, np.full((1, W), W, np.int32)], axis=0)
+
+
+# --------------------------------------------------------------------------
+# the banded numeric plan (TOP-ILU execution unit)
+# --------------------------------------------------------------------------
 @dataclasses.dataclass
 class NumericPlan:
     n: int  # original dimension
@@ -42,7 +240,7 @@ class NumericPlan:
     n_devices: int  # D
     k: int
 
-    cols: np.ndarray  # (n_pad, W) int32, -1 padded
+    cols: np.ndarray  # (n_pad, W) int32, COL_SENTINEL padded
     diag_pos: np.ndarray  # (n_pad,) int32
     row_len: np.ndarray  # (n_pad,) int32
     a_vals: np.ndarray  # (n_pad, W) f32 — A scattered on the pattern
@@ -51,6 +249,17 @@ class NumericPlan:
 
     max_pivots_per_band: int  # bound for inter-band partial reductions
     max_intra_pivots: int  # bound for finishing a band
+
+    # --- precomputed pivot gathers (shared execute-layer contract) --------
+    max_piv: int  # MP: bound on pivots per row (== max diag_pos)
+    piv_rows: np.ndarray  # (n_pad, MP) int32, n_pad-padded
+    piv_dlane: np.ndarray  # (n_pad, MP) int32
+    piv_dst: np.ndarray  # (n_pad, MP, W) int32 in [0, W]; W = dropped
+
+    # --- band superstep schedule (wavefronts over the band DAG) -----------
+    n_supersteps: int
+    bands_per_superstep: int  # max bands a single device owns in one superstep
+    superstep_bands: np.ndarray  # (n_sup, D, MPD) int32 band ids, B-padded
 
     # --- band sharding (device-major permutation) -------------------------
     @property
@@ -76,6 +285,42 @@ class NumericPlan:
         return banded[perm].reshape(x.shape)
 
 
+def _band_superstep_schedule(pivot_start, band_of_row, n_bands, n_devices):
+    """Wavefronts over the band-dependency DAG, grouped by owning device.
+
+    Band ``b`` waits on band ``b'`` iff some row of ``b`` has a pivot in
+    ``b'`` (strictly earlier band). Bands in the same superstep share no
+    dependencies, so they factor concurrently; grouping members by owner
+    ``b % D`` gives each device its static slice of every superstep.
+    Returns ``(n_sup, D, MPD)`` int32, padded with ``n_bands``.
+    """
+    counts = np.diff(pivot_start, axis=1)  # (n_pad, B)
+    n_pad = counts.shape[0]
+    counts = counts.copy()
+    counts[np.arange(n_pad), band_of_row] = 0  # intra-band handled in-band
+    jj, bb = np.nonzero(counts > 0)
+    pairs = np.unique(band_of_row[jj].astype(np.int64) * n_bands + bb)
+    dst = pairs // n_bands
+    src = pairs - dst * n_bands
+    waves = wavefront_schedule(src, dst, n_bands)  # (n_sup, maxr), B-padded
+    n_sup = waves.shape[0]
+    s_of, col = np.nonzero(waves < n_bands)
+    b = waves[s_of, col].astype(np.int64)
+    owner = b % n_devices
+    order = np.lexsort((b, owner, s_of))
+    s_s, o_s, b_s = s_of[order], owner[order], b[order]
+    key = s_s * n_devices + o_s
+    head = np.ones(len(key), bool)
+    head[1:] = key[1:] != key[:-1]
+    gstart = np.nonzero(head)[0]
+    glen = np.diff(np.append(gstart, len(key)))
+    mpd = max(int(glen.max(initial=0)), 1)
+    rank = np.arange(len(key)) - np.repeat(gstart, glen)
+    out = np.full((n_sup, n_devices, mpd), n_bands, dtype=np.int32)
+    out[s_s, o_s, rank] = b_s
+    return out
+
+
 def make_plan(
     a: CSRMatrix,
     pattern: ILUPattern,
@@ -90,30 +335,18 @@ def make_plan(
     bands = -(-bands // n_devices) * n_devices
     n_pad = bands * band_rows
 
-    ell = ELLMatrix.from_pattern(pattern, a, pad_rows_to=1)
-    W = ell.width
-    cols = np.full((n_pad, W), COL_SENTINEL, dtype=np.int32)
-    vals = np.zeros((n_pad, W), dtype=np.float32)
-    diag_pos = np.zeros(n_pad, dtype=np.int32)
-    row_len = np.zeros(n_pad, dtype=np.int32)
-    ell_cols = ell.cols.copy()
-    ell_cols[ell_cols < 0] = COL_SENTINEL  # ELLMatrix pads with -1
-    cols[: ell.n] = ell_cols
-    vals[: ell.n] = ell.vals
-    diag_pos[: ell.n] = ell.diag_pos
-    row_len[: ell.n] = ell.row_len
-    for j in range(ell.n, n_pad):  # identity padding rows
-        cols[j, 0] = j
-        vals[j, 0] = 1.0
-        row_len[j] = 1
+    cols, vals, diag_pos, row_len, _ = ell_from_pattern(pattern, a, n_pad)
+    W = cols.shape[1]
 
     # pivot_start[j, b] = #entries of row j with col < b*R, clipped to diag_pos
-    boundaries = np.arange(bands + 1, dtype=np.int64) * band_rows
-    pivot_start = np.zeros((n_pad, bands + 1), dtype=np.int32)
-    for j in range(n_pad):
-        m = int(row_len[j])
-        ps = np.searchsorted(cols[j, :m].astype(np.int64), boundaries, side="left")
-        pivot_start[j] = np.minimum(ps, diag_pos[j])
+    valid = cols < COL_SENTINEL
+    row_idx, lane_idx = np.nonzero(valid)
+    entry_band = np.minimum(cols[row_idx, lane_idx].astype(np.int64) // band_rows, bands - 1)
+    cnt = np.bincount(row_idx * bands + entry_band, minlength=n_pad * bands)
+    cnt = cnt.reshape(n_pad, bands)
+    ps = np.zeros((n_pad, bands + 1), dtype=np.int64)
+    np.cumsum(cnt, axis=1, out=ps[:, 1:])
+    pivot_start = np.minimum(ps, diag_pos[:, None].astype(np.int64)).astype(np.int32)
 
     band_of_row = (np.arange(n_pad) // band_rows).astype(np.int32)
 
@@ -124,6 +357,9 @@ def make_plan(
     inter[np.arange(n_pad), band_of_row] = 0
     max_intra = int(intra.max()) if n_pad else 0
     max_inter = int(inter.max()) if n_pad else 0
+
+    piv_rows, piv_dlane, piv_dst = pivot_gather_maps(cols, diag_pos)
+    sched = _band_superstep_schedule(pivot_start, band_of_row, bands, n_devices)
 
     return NumericPlan(
         n=n,
@@ -141,6 +377,13 @@ def make_plan(
         band_of_row=band_of_row,
         max_pivots_per_band=max(max_inter, 1),
         max_intra_pivots=max(max_intra, 1),
+        max_piv=piv_rows.shape[1],
+        piv_rows=piv_rows,
+        piv_dlane=piv_dlane,
+        piv_dst=piv_dst,
+        n_supersteps=sched.shape[0],
+        bands_per_superstep=sched.shape[2],
+        superstep_bands=sched,
     )
 
 

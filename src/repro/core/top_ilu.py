@@ -1,50 +1,55 @@
 """TOP-ILU — task-oriented parallel ILU(k) over a device mesh (paper §IV).
 
-Maps the paper's distributed-memory algorithm onto JAX SPMD:
+Maps the paper's distributed-memory algorithm onto JAX SPMD, re-emitted
+(PR 2) over the *band superstep schedule* from the planner:
 
-* bands → round-robin shards over the mesh axis (static load balancing,
+* bands → round-robin ownership over the mesh axis (static load balancing,
   §IV-D; device ``d`` owns bands ``{b : b ≡ d (mod D)}``),
-* the frontier loop → ``lax.fori_loop`` over bands inside one jitted step,
-* the Fig-4 ring pipeline → a masked ``psum`` broadcast of each finished
-  band (XLA lowers it to a ring collective) or an explicit ``ppermute``
-  directed ring (``broadcast='ring'``),
+* the frontier loop → ``lax.fori_loop`` over band-dependency *wavefronts*
+  inside one jitted step: bands whose dependencies are satisfied factor
+  concurrently (each device vmaps over the members it owns), pulling
+  inter-band pivot rows from the replicated finalized values,
+* the Fig-4 ring pipeline → ONE collective per superstep — an XLA ring
+  ``all_gather`` of the bands each device finished (``broadcast='psum'``
+  is accepted as the historical alias for this fast path) or an explicit
+  ``ppermute`` directed ring (``broadcast='ring'``) — merging every band
+  finished in the superstep, instead of one broadcast per band,
 * dynamic load balancing (master/worker) → intentionally absent from the
   SPMD fast path; the paper itself measures static LB as strictly better
   (Table I). It survives as the fault-tolerance reassignment path in
   ``repro.runtime``.
 
-Unlike the paper we do *not* replicate the whole filled matrix per node:
-because the symbolic pattern is static planning output on TPU, each device
-stores only its owned bands plus one in-flight band buffer, and structure
-(column indices) is never communicated (4 bytes/entry on the wire instead
-of the paper's 8 — see §V-E and DESIGN.md §3).
+Structure (column indices, destination-lane maps, the schedule itself) is
+static planning output and never communicated: 4 bytes/entry on the wire
+instead of the paper's 8 — see §V-E and DESIGN.md §3. Values are held
+replicated during factorization (n_pad×W f32 per device); sharding the
+value storage over the mesh is an open ROADMAP item.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.compat import shard_map
 
 from .planner import NumericPlan, make_plan
-from .numeric_jax import make_banded_factorizer, plan_device_arrays
+from .numeric_jax import make_superstep_factorizer, plan_device_arrays
 from .sparse import CSRMatrix, ILUPattern
 
 AXIS = "band"
 
+_ARG_ORDER = ("vals", "sched", "piv_rows", "piv_dlane", "piv_dst", "n_piv")
 
-def _values_to_csr_order(plan: NumericPlan, pattern: ILUPattern, vals_dm: np.ndarray) -> np.ndarray:
-    """Device-major padded values -> CSR-aligned flat values."""
-    vals_rm = plan.rows_from_device_major(np.asarray(vals_dm))
-    out = np.zeros(pattern.nnz, dtype=np.float32)
-    for j in range(pattern.n):
-        s, e = pattern.indptr[j], pattern.indptr[j + 1]
-        out[s:e] = vals_rm[j, : e - s]
-    return out
+
+def _values_to_csr_order(plan: NumericPlan, pattern: ILUPattern, vals_rm: np.ndarray) -> np.ndarray:
+    """Padded row-major values -> CSR-aligned flat values (one gather)."""
+    vals_rm = np.asarray(vals_rm)
+    rowlen = np.diff(pattern.indptr).astype(np.int64)
+    row_of = np.repeat(np.arange(pattern.n, dtype=np.int64), rowlen)
+    lane = np.arange(pattern.nnz, dtype=np.int64) - pattern.indptr[row_of]
+    return vals_rm[row_of, lane].astype(np.float32)
 
 
 def topilu_numeric(
@@ -65,30 +70,23 @@ def topilu_numeric(
     d = mesh.devices.size
     plan = make_plan(a, pattern, band_rows=band_rows, n_devices=d)
     arrays = plan_device_arrays(plan)
-    fac = make_banded_factorizer(plan, axis_name=AXIS if d > 1 else None, broadcast=broadcast)
+    fac = make_superstep_factorizer(plan, axis_name=AXIS if d > 1 else None, broadcast=broadcast)
+    args = tuple(arrays[k] for k in _ARG_ORDER)
 
     if d == 1:
-        run = jax.jit(fac)
-        vals = run(
-            arrays["vals"], arrays["cols"], arrays["pivot_start"], arrays["band_of_row"],
-            arrays["intra_start"], arrays["intra_count"], arrays["cols_all"], arrays["dpos_all"],
-        )
-        return _values_to_csr_order(plan, pattern, vals)
+        vals = jax.jit(fac)(*args)
+        return _values_to_csr_order(plan, pattern, np.asarray(vals))
 
-    shard = P(AXIS)
-    rep = P()
+    # every input is replicated; device identity comes from the axis index,
+    # and the superstep collective merges each wave of finished bands
     smapped = shard_map(
-        functools.partial(fac),
+        fac,
         mesh=mesh,
-        in_specs=(shard, shard, shard, shard, shard, shard, rep, rep),
-        out_specs=shard,
+        in_specs=(P(),) * len(args),
+        out_specs=P(),
         check_vma=False,
     )
-    run = jax.jit(smapped)
-    vals = run(
-        arrays["vals"], arrays["cols"], arrays["pivot_start"], arrays["band_of_row"],
-        arrays["intra_start"], arrays["intra_count"], arrays["cols_all"], arrays["dpos_all"],
-    )
+    vals = jax.jit(smapped)(*args)
     return _values_to_csr_order(plan, pattern, np.asarray(vals))
 
 
@@ -103,16 +101,15 @@ def lower_topilu(
     d = mesh.devices.size
     plan = make_plan(a, pattern, band_rows=band_rows, n_devices=d)
     arrays = plan_device_arrays(plan)
-    fac = make_banded_factorizer(plan, axis_name=AXIS, broadcast=broadcast)
+    fac = make_superstep_factorizer(plan, axis_name=AXIS, broadcast=broadcast)
     smapped = shard_map(
         fac,
         mesh=mesh,
-        in_specs=(P(AXIS),) * 6 + (P(), P()),
-        out_specs=P(AXIS),
+        in_specs=(P(),) * len(_ARG_ORDER),
+        out_specs=P(),
         check_vma=False,
     )
     args = [
-        jax.ShapeDtypeStruct(arrays[k].shape, arrays[k].dtype)
-        for k in ("vals", "cols", "pivot_start", "band_of_row", "intra_start", "intra_count", "cols_all", "dpos_all")
+        jax.ShapeDtypeStruct(arrays[k].shape, arrays[k].dtype) for k in _ARG_ORDER
     ]
     return jax.jit(smapped).lower(*args), plan

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bitmath import masked_lane_sum
-from .planner import COL_SENTINEL
+from .planner import COL_SENTINEL, wavefront_schedule_ell
 from .sparse import ILUPattern
 
 
@@ -92,56 +92,6 @@ class TriangularPlan:
         }
 
 
-def _wavefronts_ell(dep_cols: np.ndarray, n: int) -> np.ndarray:
-    """Group rows into wavefront levels from sentinel-padded dependency
-    columns. Vectorized frontier sweep: wave ``t`` is exactly the set of rows
-    whose dependencies all resolved in waves ``< t`` (equal to the classical
-    ``level[j] = 1 + max(level[deps])`` recursion), so the output matches the
-    sequential per-row computation level for level."""
-    if n == 0:
-        return np.zeros((0, 1), dtype=np.int32)
-    valid = dep_cols < n  # sentinel and out-of-range lanes carry no dependency
-    indeg = valid.sum(axis=1).astype(np.int64)
-    dst, lane = np.nonzero(valid)  # row `dst` waits on row `src`
-    src = dep_cols[dst, lane].astype(np.int64)
-    order_e = np.argsort(src, kind="stable")
-    src_s, dst_s = src[order_e], dst[order_e]
-    starts = np.searchsorted(src_s, np.arange(n))
-    ends = np.searchsorted(src_s, np.arange(n) + 1)
-    level = np.zeros(n, dtype=np.int64)
-    front = np.nonzero(indeg == 0)[0]
-    lev = 0
-    assigned = 0
-    while front.size:
-        level[front] = lev
-        assigned += front.size
-        elens = ends[front] - starts[front]
-        total = int(elens.sum())
-        if total:
-            base = np.repeat(starts[front], elens)
-            cum = np.cumsum(elens)
-            within = np.arange(total) - np.repeat(cum - elens, elens)
-            children = dst_s[base + within]
-            np.subtract.at(indeg, children, 1)
-            cand = np.unique(children)
-            front = cand[indeg[cand] == 0]
-        else:
-            front = np.zeros(0, dtype=np.int64)
-        lev += 1
-    if assigned != n:  # cyclic dependencies — cannot happen for triangular factors
-        raise ValueError("dependency cycle in triangular schedule")
-    nlev = lev
-    order = np.argsort(level, kind="stable")  # rows ascending within each level
-    counts = np.bincount(level, minlength=nlev)
-    maxr = max(int(counts.max()), 1)
-    starts = np.zeros(nlev, dtype=np.int64)
-    np.cumsum(counts[:-1], out=starts[1:])
-    out = np.full((nlev, maxr), n, dtype=np.int32)  # n = scratch row
-    rank = np.arange(n) - starts[level[order]]
-    out[level[order], rank] = order
-    return out
-
-
 def _split_lu_ell(pattern: ILUPattern, vals: np.ndarray):
     """Vectorized CSR -> (L, U, diag) sentinel-padded ELL split."""
     n = pattern.n
@@ -190,9 +140,11 @@ def _slot_of_row(levels: np.ndarray, n: int) -> np.ndarray:
 def build_triangular_plan(pattern: ILUPattern, vals: np.ndarray) -> TriangularPlan:
     n = pattern.n
     l_cols, l_vals, u_cols, u_vals, diag = _split_lu_ell(pattern, vals)
-    l_levels = _wavefronts_ell(l_cols, n)
+    # the shared vectorized Kahn scheduler (repro.core.planner) builds both
+    # sweeps' wavefronts — same primitive as the factorization plan
+    l_levels = wavefront_schedule_ell(l_cols, n)
     # U solve runs bottom-up; dependencies are the above-diagonal columns
-    u_levels = _wavefronts_ell(u_cols, n)
+    u_levels = wavefront_schedule_ell(u_cols, n)
 
     # --- level-major execution layout ------------------------------------
     nl_slots = int(l_levels.size)

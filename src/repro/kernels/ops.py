@@ -71,6 +71,16 @@ def trsm_left_unit_lower(l, a, bn=256):
     return out[:, :n]
 
 
+def factor_wavefront(op_row, op_lane, op_piv, op_dlane, op_dst, dst_flat, a_vals_ext):
+    """Round-major pivot-op ILU(k) numeric factorization (bit-compatible)."""
+    args = (op_row, op_lane, op_piv, op_dlane, op_dst, dst_flat, a_vals_ext)
+    if _DISABLED:
+        from repro.core.numeric_jax import factor_wavefront_sweeps_jnp
+
+        return factor_wavefront_sweeps_jnp(*args)
+    return _pu.factor_wavefront(*args, interpret=_interpret())
+
+
 def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
                         u_rhs_idx, out_perm, b):
     """Fused (LU)^{-1} b over level-major plan arrays (bit-compatible)."""

@@ -106,8 +106,10 @@ def _build_cell(arch, shape_name, multi_pod, opts):
     t_a = time.time() - t0
     mem = compiled_a.memory_analysis()
     print(mem)  # proves it fits
-    print({k: compiled_a.cost_analysis()[k]
-           for k in ("flops", "bytes accessed") if k in compiled_a.cost_analysis()})
+    from repro.roofline.analysis import cost_analysis_dict
+
+    ca_a = cost_analysis_dict(compiled_a)
+    print({k: ca_a[k] for k in ("flops", "bytes accessed") if k in ca_a})
 
     # ---- pass B: cost form — unrolled 1-layer and 2-layer modules, prefix
     # attention, no grad-accumulation loop; per-layer costs extrapolated to

@@ -121,9 +121,18 @@ class RooflineReport:
         return dataclasses.asdict(self)
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across jax versions (older
+    versions return ``[dict]``, jax>=0.4.3x a bare dict or list)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def extract_costs(compiled) -> Dict[str, float]:
     """Per-device flops / bytes / per-kind collective bytes of one module."""
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll = collective_bytes_per_device(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -69,7 +69,9 @@ def main():
                 step, in_shardings=tuple(in_sh), out_shardings=(None, None, c_shard),
             ).lower(*args)
         compiled = lowered.compile()
-    ca = compiled.cost_analysis()
+    from repro.roofline.analysis import cost_analysis_dict
+
+    ca = cost_analysis_dict(compiled)
     assert ca.get("flops", 0) > 0, ca
     print(f"OK {arch} {kind}: flops/dev={ca['flops']:.3g}")
 

@@ -1,0 +1,52 @@
+"""Robust subprocess runner for multi-device / dry-run tests.
+
+On this container (2 vCPU under a sandboxed kernel) a child process running
+simulated-multi-device XLA occasionally stalls for minutes when its
+stdout/stderr are OS pipes — the same command with file-backed IO completes
+in seconds, reliably. So: redirect the child to temp files (read them back
+afterwards) and retry once on a stall before failing. Keeps the tests
+meaningful (a deterministic failure still fails twice) without letting a
+scheduler hiccup burn a whole CI run.
+"""
+import signal
+import subprocess
+import tempfile
+import time
+
+
+def run_checked(cmd, env, timeout, tries=2):
+    """Run ``cmd``; returns (returncode, stdout, stderr) of the last try.
+
+    A try that exceeds ``timeout`` gets SIGABRT (so ``faulthandler`` dumps
+    every thread's Python stack into the captured stderr), then SIGKILL,
+    then one retry; only a timeout triggers a retry — a nonzero exit
+    returns immediately so assertion failures surface with their output.
+    """
+    env = dict(env)
+    env.setdefault("PYTHONFAULTHANDLER", "1")
+    last = None
+    for attempt in range(tries):
+        with tempfile.TemporaryFile() as out_f, tempfile.TemporaryFile() as err_f:
+            proc = subprocess.Popen(cmd, env=env, stdout=out_f, stderr=err_f)
+            try:
+                rc = proc.wait(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                try:
+                    proc.send_signal(signal.SIGABRT)
+                    proc.wait(timeout=15)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+                    proc.wait()
+                time.sleep(0.2)  # let the final stderr writes land
+                out_f.seek(0)
+                err_f.seek(0)
+                last = (-1, out_f.read().decode(errors="replace"),
+                        err_f.read().decode(errors="replace")
+                        + f"\n[test harness] timed out after {timeout}s "
+                        f"(attempt {attempt + 1}/{tries})")
+                continue
+            out_f.seek(0)
+            err_f.seek(0)
+            return (rc, out_f.read().decode(errors="replace"),
+                    err_f.read().decode(errors="replace"))
+    return last

@@ -3,10 +3,11 @@ reduced configs of every family on a (2,4) mesh. (The full 512-device
 production dry-run is exercised by `python -m repro.launch.dryrun --all`;
 its 40-cell results live in experiments/dryrun/ and EXPERIMENTS.md.)"""
 import os
-import subprocess
 import sys
 
 import pytest
+
+from subproc import run_checked
 
 SCRIPT = os.path.join(os.path.dirname(__file__), "dryrun_small_check.py")
 
@@ -26,9 +27,7 @@ CASES = [
 def test_small_dryrun(arch, kind):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    res = subprocess.run(
-        [sys.executable, SCRIPT, arch, kind],
-        env=env, capture_output=True, text=True, timeout=900,
-    )
-    assert res.returncode == 0, f"stdout:{res.stdout}\nstderr:{res.stderr[-1500:]}"
-    assert "OK" in res.stdout
+    env["JAX_PLATFORMS"] = "cpu"  # don't probe for real TPUs (see test_topilu_multidevice)
+    rc, out, err = run_checked([sys.executable, SCRIPT, arch, kind], env=env, timeout=600)
+    assert rc == 0, f"stdout:{out}\nstderr:{err[-1500:]}"
+    assert "OK" in out

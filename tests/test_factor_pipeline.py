@@ -1,0 +1,159 @@
+"""Plan→compile→execute factorization pipeline: bitwise regression suite.
+
+The PR-2 tentpole contract: every engine emitted from the factorization
+plans — the single-device wavefront engine (``backend="jax"``), the band
+superstep TOP-ILU engine, 1 or 2 devices — produces float32 factor values
+**exactly equal** (int32 view) to the sequential oracle
+``numeric_ilu_ref``, for both level rules, across band sizes; and the
+vectorized symbolic frontier equals the per-row reference pattern-for-
+pattern. 2-device cases run in subprocesses (JAX locks the host device
+count at first init).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from subproc import run_checked
+
+from repro.core import (
+    matgen,
+    numeric_ilu_ref,
+    pilu1_symbolic,
+    poisson_2d,
+    symbolic_ilu_k,
+    symbolic_ilu_k_ref,
+)
+from repro.core.api import ilu
+from repro.core.factor_plan import build_factor_plan, factor_plan_for
+from repro.core.top_ilu import topilu_numeric
+
+MD_SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_check.py")
+
+
+def _assert_bitwise(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    mism = np.nonzero(got.view(np.int32) != want.view(np.int32))[0]
+    assert mism.size == 0, (
+        f"{mism.size}/{want.size} entries differ bitwise; first={mism[:5]} "
+        f"got={got[mism[:5]]} want={want[mism[:5]]}"
+    )
+
+
+def _pattern(a, k, rule):
+    return pilu1_symbolic(a, rule=rule) if k == 1 else symbolic_ilu_k(a, k, rule=rule)
+
+
+# --------------------------------------------------------------------------
+# symbolic: vectorized frontier == per-row reference
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("rule", ["sum", "max"])
+@pytest.mark.parametrize("k", [0, 1, 2, 3])
+def test_symbolic_frontier_equals_reference(k, rule):
+    for seed in (0, 1, 2):
+        a = matgen(80, density=0.07, seed=seed + 13 * k)
+        fast = symbolic_ilu_k(a, k, rule=rule)
+        ref = symbolic_ilu_k_ref(a, k, rule=rule)
+        np.testing.assert_array_equal(fast.indptr, ref.indptr)
+        np.testing.assert_array_equal(fast.indices, ref.indices)
+        np.testing.assert_array_equal(fast.levels, ref.levels)
+        np.testing.assert_array_equal(fast.diag_ptr, ref.diag_ptr)
+
+
+# --------------------------------------------------------------------------
+# single-device engines vs the oracle, exact ==
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("rule", ["sum", "max"])
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_wavefront_engine_bitwise(k, rule):
+    a = matgen(96, density=0.06, seed=7 * k + (rule == "max"))
+    pat = _pattern(a, k, rule)
+    want = numeric_ilu_ref(a, pat)
+    _assert_bitwise(ilu(a, k, rule=rule, backend="jax").vals, want)
+
+
+@pytest.mark.parametrize("band_rows", [8, 32])
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_superstep_engine_bitwise(k, band_rows):
+    a = matgen(96, density=0.06, seed=10 * k + band_rows)
+    pat = _pattern(a, k, "sum")
+    want = numeric_ilu_ref(a, pat)
+    _assert_bitwise(topilu_numeric(a, pat, band_rows=band_rows), want)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_factor_plan_engines_agree(use_pallas):
+    """Pallas kernel and jnp engine share one implementation — exact ==."""
+    a = poisson_2d(10)
+    pat = pilu1_symbolic(a)
+    want = numeric_ilu_ref(a, pat)
+    plan = build_factor_plan(a, pat)
+    _assert_bitwise(plan.factorize(use_pallas=use_pallas), want)
+
+
+def test_structured_poisson_bitwise():
+    a = poisson_2d(12)
+    for k, rule in ((1, "sum"), (2, "sum"), (2, "max")):
+        pat = _pattern(a, k, rule)
+        want = numeric_ilu_ref(a, pat)
+        _assert_bitwise(ilu(a, k, rule=rule, backend="jax").vals, want)
+        _assert_bitwise(topilu_numeric(a, pat, band_rows=16), want)
+
+
+# --------------------------------------------------------------------------
+# plan/engine caching + refactorization
+# --------------------------------------------------------------------------
+def test_factor_plan_cached_on_matrix():
+    a = matgen(64, density=0.08, seed=3)
+    pat = pilu1_symbolic(a)
+    p1 = factor_plan_for(a, pat)
+    p2 = factor_plan_for(a, pat)
+    assert p1 is p2
+    assert p1.engine() is p1.engine()  # compiled engine cached on the plan
+
+
+def test_refactorize_same_structure_new_values():
+    """The serving pattern: same structure, new numbers — no replanning."""
+    a = matgen(72, density=0.08, seed=5)
+    pat = pilu1_symbolic(a)
+    plan = build_factor_plan(a, pat)
+    _assert_bitwise(plan.factorize(), numeric_ilu_ref(a, pat))
+    import dataclasses
+
+    a2 = dataclasses.replace(a, data=(a.data * 1.5 + 0.25).astype(np.float32))
+    _assert_bitwise(plan.factorize(a2), numeric_ilu_ref(a2, pat))
+
+
+# --------------------------------------------------------------------------
+# end-to-end: solve_with_ilu unchanged vs the oracle-backend pipeline
+# --------------------------------------------------------------------------
+def test_solve_with_ilu_end_to_end_unchanged():
+    from repro.core.solvers import solve_with_ilu
+
+    a = poisson_2d(10)
+    b = np.random.default_rng(0).standard_normal(a.n).astype(np.float32)
+    res_jax, fact_jax = solve_with_ilu(a, b, k=1, backend="jax", tol=1e-6)
+    res_orc, fact_orc = solve_with_ilu(a, b, k=1, backend="oracle", tol=1e-6)
+    # identical factor values => identical preconditioner => identical solve
+    _assert_bitwise(fact_jax.vals, fact_orc.vals)
+    _assert_bitwise(res_jax.x, res_orc.x)
+    assert res_jax.iterations == res_orc.iterations
+    assert res_jax.converged
+
+
+# --------------------------------------------------------------------------
+# 2-device engines (subprocess; exact == asserted by the check script)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("k,band_rows", [(1, 8), (1, 32), (2, 8), (2, 32)])
+def test_two_device_bitwise(k, band_rows):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["JAX_PLATFORMS"] = "cpu"  # don't probe for real TPUs (see test_topilu_multidevice)
+    rc, out, err = run_checked(
+        [sys.executable, MD_SCRIPT, "96", str(k), str(band_rows), "psum"],
+        env=env, timeout=300,
+    )
+    assert rc == 0, f"stdout:\n{out}\nstderr:\n{err[-2000:]}"
+    assert "bitwise-equal" in out

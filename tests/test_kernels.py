@@ -149,6 +149,71 @@ def test_trsm_left_unit_lower_bitwise_vs_subst_ref(bs, n, bn):
     _assert_bitwise(got, want)
 
 
+@pytest.mark.parametrize("seed,k", [(0, 1), (2, 2)])
+def test_factor_wavefront_kernel_bitwise_vs_oracle(seed, k):
+    """The factor-side twin of the tri-solve contract: the fused Pallas
+    wavefront factorization == the sequential oracle, bit for bit."""
+    from repro.core import matgen, numeric_ilu_ref, symbolic_ilu_k
+    from repro.core.factor_plan import build_factor_plan
+
+    a = matgen(110, density=0.06, seed=seed)
+    pat = symbolic_ilu_k(a, k)
+    want = numeric_ilu_ref(a, pat)
+    plan = build_factor_plan(a, pat)
+    dev = plan.device_arrays()
+    got = ops.factor_wavefront(
+        dev["op_row"], dev["op_lane"], dev["op_piv"], dev["op_dlane"],
+        dev["op_dst"], dev["dst_flat"], jnp.asarray(plan.a_vals),
+    )
+    _assert_bitwise(plan.values_to_csr(np.asarray(got)), want)
+
+
+# --------------------------------------------------------------------------
+# Compiled (non-interpret) lowering: only meaningful on real TPU hardware.
+# Gated by the `pallas_compiled` marker + REPRO_PALLAS_INTERPRET=0 toggle
+# (see conftest.py) so CPU CI skips them cleanly.
+# --------------------------------------------------------------------------
+@pytest.mark.pallas_compiled
+def test_compiled_panel_update_matches_interpret():
+    from repro.kernels import panel_update as pu
+
+    a = jnp.asarray(RNG.standard_normal((128, 128)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((128, 128)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((128, 128)), jnp.float32)
+    got = pu.panel_update(c, a, b, bm=128, bn=128, bk=128, interpret=False)
+    want = pu.panel_update(c, a, b, bm=128, bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.pallas_compiled
+def test_compiled_spmv_ell_bitwise():
+    from repro.kernels import spmv_ell as sp
+
+    cols, vals = _rand_ell(256, 8, np.random.default_rng(7))
+    x = np.random.default_rng(8).standard_normal(256).astype(np.float32)
+    got = sp.spmv_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x),
+                      bm=256, interpret=False)
+    want = ref.spmv_ell_ref(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x))
+    _assert_bitwise(got, want)
+
+
+@pytest.mark.pallas_compiled
+def test_compiled_factor_wavefront_bitwise():
+    from repro.core import matgen, numeric_ilu_ref, symbolic_ilu_k
+    from repro.core.factor_plan import build_factor_plan
+    from repro.kernels import panel_update as pu
+
+    a = matgen(96, density=0.06, seed=11)
+    pat = symbolic_ilu_k(a, 1)
+    plan = build_factor_plan(a, pat)
+    dev = plan.device_arrays()
+    got = pu.factor_wavefront(
+        dev["op_row"], dev["op_lane"], dev["op_piv"], dev["op_dlane"],
+        dev["op_dst"], dev["dst_flat"], jnp.asarray(plan.a_vals), interpret=False,
+    )
+    _assert_bitwise(plan.values_to_csr(np.asarray(got)), numeric_ilu_ref(a, pat))
+
+
 @pytest.mark.parametrize("seed,k", [(0, 1), (3, 2)])
 def test_wavefront_kernel_bit_identical_to_triangular_solver(seed, k):
     """Regression for the PR's central claim: the fused Pallas wavefront

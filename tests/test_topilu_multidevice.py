@@ -4,10 +4,11 @@ Each case runs in a subprocess because JAX locks the host device count at
 first init (the main pytest process must keep seeing 1 device).
 """
 import os
-import subprocess
 import sys
 
 import pytest
+
+from subproc import run_checked
 
 SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_check.py")
 
@@ -15,13 +16,16 @@ SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_check.py")
 def _run(n, k, band_rows, broadcast, devices):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env.pop("JAX_PLATFORMS", None)
-    res = subprocess.run(
+    # force the simulated-CPU backend: without this the child probes for a
+    # real TPU (30 GCP-metadata fetch retries, minutes of hang) before
+    # falling back — the cause of the flaky/slow seed runs of this file
+    env["JAX_PLATFORMS"] = "cpu"
+    rc, out, err = run_checked(
         [sys.executable, SCRIPT, str(n), str(k), str(band_rows), broadcast],
-        env=env, capture_output=True, text=True, timeout=600,
+        env=env, timeout=300,
     )
-    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-2000:]}"
-    assert "bitwise-equal" in res.stdout
+    assert rc == 0, f"stdout:\n{out}\nstderr:\n{err[-2000:]}"
+    assert "bitwise-equal" in out
 
 
 @pytest.mark.parametrize("broadcast", ["psum", "ring"])
