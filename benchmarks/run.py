@@ -10,7 +10,10 @@ the roofline, EXPERIMENTS.md §Roofline).
 ``--emit-json BENCH_solver.json`` additionally serializes the
 device-resident solver-engine metrics (preconditioner-apply latency, GMRES
 iterations/sec, first/steady solve wall times) so later PRs have a perf
-trajectory to compare against. Set ``REPRO_JIT_CACHE=<dir>`` to enable
+trajectory to compare against. ``--emit-json BENCH_topilu.json`` runs the
+*distributed* sharded-TOP-ILU trajectory instead: 1/2/8 simulated devices,
+per-device value bytes, and the per-superstep halo collective payload from
+the roofline model (cross-checked against compiled HLO). Set ``REPRO_JIT_CACHE=<dir>`` to enable
 jax's persistent compilation cache (makes the one-time engine jit a
 once-per-machine cost instead of once-per-process).
 """
@@ -131,6 +134,41 @@ def bench_factorization(rows, quick=True):
     return m
 
 
+def bench_topilu(rows, devices=(1, 2, 8)):
+    """Distributed sharded-TOP-ILU trajectory (PR-3 tentpole).
+
+    Spawns one subprocess per simulated device count (the host device count
+    locks at first JAX init) and aggregates the per-device memory +
+    collective-payload records from ``benchmarks/bench_topilu.py``. Only
+    runs when the ``--emit-json`` basename contains ``topilu`` (the same
+    filename convention that selects the factorization payload): the three
+    jax subprocesses are too slow to fold into every CSV run.
+    """
+    import subprocess
+
+    grid = 32  # n=1024 — small enough for the 1-core CI, supersteps > 60
+    child = os.path.join(os.path.dirname(__file__), "bench_topilu.py")
+    cases = []
+    for d in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["_BENCH_TOPILU_CHILD"] = "1"
+        out = subprocess.run(
+            [sys.executable, child, str(grid)], env=env, capture_output=True,
+            text=True, timeout=600,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(f"bench_topilu D={d} failed:\n{out.stderr[-2000:]}")
+        m = json.loads(out.stdout)
+        cases.append(m)
+        rows.append((f"topilu.factor_d{d}", m["factor_steady_seconds"] * 1e6,
+                     f"bitwise={m['bitwise_equal_oracle']} "
+                     f"per_dev_B={m['per_device_value_bytes']} "
+                     f"halo_B_per_step={m['halo_bytes_per_superstep']}"))
+    return {"cases": cases, "grid": grid}
+
+
 def bench_solver(rows, quick=True):
     """Device-resident preconditioned Krylov engine (PR-1 tentpole)."""
     from benchmarks import bench_ilu as B
@@ -163,6 +201,21 @@ def main() -> None:
         jax.config.update("jax_compilation_cache_dir", cache_dir)
         jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
     rows = []
+    topilu_metrics = None
+    emit_topilu = emit_json and "topilu" in os.path.basename(emit_json)
+    if emit_topilu:
+        # distributed trajectory only: spawning 3 jax subprocesses is too
+        # slow to fold into every CSV run
+        topilu_metrics = bench_topilu(rows)
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        payload = {"bench": "topilu_sharded", "quick": quick,
+                   "metrics": topilu_metrics}
+        with open(emit_json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {emit_json}", file=sys.stderr)
+        return
     solver_metrics = bench_solver(rows, quick)
     factor_metrics = bench_factorization(rows, quick)
     bench_bitcompat(rows, quick)

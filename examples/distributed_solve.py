@@ -1,0 +1,82 @@
+"""Distributed device-resident factorize + solve — the paper's §IV story,
+end to end, runnable on CPU.
+
+Forces a simulated multi-device mesh (``XLA_FLAGS=
+--xla_force_host_platform_device_count``), factors with the sharded TOP-ILU
+engine (each device stores only its bands' values + a pivot-row halo),
+solves with the band-partitioned preconditioner + row-block sharded SpMV —
+L/U and A are never re-replicated onto one device — and asserts the whole
+pipeline is **bitwise equal** to the single-device path.
+
+    python examples/distributed_solve.py [devices] [grid]   # default 4, 24
+"""
+import os
+import subprocess
+import sys
+
+if os.environ.get("_DIST_SOLVE_CHILD") != "1":
+    d = sys.argv[1] if len(sys.argv) > 1 else "4"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+    env.setdefault("JAX_PLATFORMS", "cpu")  # don't probe for real TPUs
+    env["_DIST_SOLVE_CHILD"] = "1"
+    sys.exit(subprocess.run([sys.executable, __file__] + sys.argv[1:], env=env).returncode)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    import jax
+
+    from repro.core import numeric_ilu_ref, poisson_2d
+    from repro.core.api import ilu, ilu_sharded
+    from repro.core.solvers import solve_sharded, solve_with_ilu
+
+    grid = int(sys.argv[2]) if len(sys.argv) > 2 else 24
+    devs = jax.devices()
+    d = len(devs)
+    a = poisson_2d(grid)
+    print(f"devices: {d} (simulated mesh) | 2-D Poisson n={a.n} nnz={a.nnz}")
+
+    # -- distributed factorization: values stay sharded on the mesh --------
+    fact = ilu_sharded(a, k=1, band_rows=8)
+    plan = fact.plan
+    print(f"\nsharded TOP-ILU(1): {plan.n_bands} bands x {plan.band_rows} rows, "
+          f"{plan.n_supersteps} supersteps")
+    print(f"per-device value state : {plan.per_device_value_bytes():6d} B "
+          f"(local {plan.s_loc} rows + halo {plan.halo_size} + scratch)")
+    print(f"replicated (pre-PR-3)  : {plan.replicated_value_bytes():6d} B")
+    print(f"halo exchange          : {plan.halo_bytes_per_superstep():6d} B/superstep "
+          f"(old full-band gather: {plan.replicated_bytes_per_superstep()} B)")
+    shapes = {s.data.shape for s in fact.loc_vals.addressable_shards}
+    assert shapes == {(1, plan.s_loc, plan.width)}, shapes
+
+    # bitwise check: sharded factors == sequential oracle == jax backend
+    want = numeric_ilu_ref(a, fact.pattern)
+    got = fact.values_csr()
+    assert np.array_equal(got.view(np.int32), want.view(np.int32))
+    single = ilu(a, k=1, backend="jax")
+    assert np.array_equal(got.view(np.int32), single.vals.view(np.int32))
+    print("factor values: BITWISE EQUAL to the sequential oracle ✓")
+
+    # -- distributed solve: precond + SpMV consume the sharded storage -----
+    b = np.random.default_rng(0).standard_normal(a.n).astype(np.float32)
+    res_d, _ = solve_sharded(a, b, k=1, band_rows=8, tol=1e-6, fact=fact)
+    res_1, _ = solve_with_ilu(a, b, k=1, tol=1e-6, use_pallas=False)
+    print(f"\ndistributed GMRES : {res_d.iterations:3d} iters, "
+          f"residual {res_d.residual:.2e}, converged={res_d.converged}")
+    print(f"single-device     : {res_1.iterations:3d} iters, "
+          f"residual {res_1.residual:.2e}")
+    assert res_d.converged
+    assert np.array_equal(res_d.x.view(np.int32), res_1.x.view(np.int32))
+    print("solution vector: BITWISE EQUAL to the single-device solve ✓")
+
+    print(f"\nThe factors lived sharded across {d} devices for the whole "
+          "factorize -> precondition -> solve pipeline; only O(n) vectors "
+          "were ever replicated (DESIGN.md §5).")
+
+
+if __name__ == "__main__":
+    main()

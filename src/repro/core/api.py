@@ -9,7 +9,12 @@ Backends:
   * ``jax``      — single-device wavefront engine over a cached
                    ``FactorPlan`` (bit-compatible; ``band_rows`` ignored).
   * ``topilu``   — multi-device shard_map TOP-ILU over the band superstep
-                   schedule (bit-compatible; bands of ``band_rows`` rows).
+                   schedule (bit-compatible; bands of ``band_rows`` rows;
+                   sharded value storage + halo exchange, DESIGN.md §5).
+
+:func:`ilu_sharded` is the distributed entry point: same contract, but the
+factor values stay device-resident/sharded and the preconditioner applies
+in place (``ilu(backend="topilu")`` gathers the result to the host).
 
 The whole ``factorize → precond → solve`` pipeline is plan→compile→execute
 (DESIGN.md §3): each stage's plan and compiled engine are cached — the
@@ -68,6 +73,39 @@ class ILUFactorization:
         return self.pattern.nnz
 
 
+def _symbolic(a: CSRMatrix, k: int, rule: str):
+    if k == 1:
+        return pilu1_symbolic(a, rule=rule)  # PILU(1), paper §IV-F
+    return symbolic_ilu_k(a, k, rule=rule)
+
+
+def ilu_sharded(
+    a: CSRMatrix,
+    k: int,
+    rule: str = "sum",
+    band_rows: int = 32,
+    mesh=None,
+    broadcast: str = "psum",
+):
+    """Distributed factorization whose output **stays sharded on the mesh**
+    (``repro.core.top_ilu.ShardedILUFactorization``): each device holds only
+    its bands' factor values, the preconditioner applies in place, and
+    ``values_csr()`` gathers to the host only on explicit request. Bitwise
+    contract identical to every other backend. ``mesh=None`` builds a 1-D
+    band mesh over all available devices."""
+    from .top_ilu import topilu_factor_sharded
+
+    t0 = time.perf_counter()
+    pattern = _symbolic(a, k, rule)
+    t1 = time.perf_counter()
+    fact = topilu_factor_sharded(a, pattern, band_rows=band_rows, mesh=mesh,
+                                 broadcast=broadcast)
+    fact.loc_vals.block_until_ready()
+    fact.symbolic_seconds = t1 - t0
+    fact.numeric_seconds = time.perf_counter() - t1
+    return fact
+
+
 def ilu(
     a: CSRMatrix,
     k: int,
@@ -78,10 +116,7 @@ def ilu(
     broadcast: str = "psum",
 ) -> ILUFactorization:
     t0 = time.perf_counter()
-    if k == 1:
-        pattern = pilu1_symbolic(a, rule=rule)  # PILU(1), paper §IV-F
-    else:
-        pattern = symbolic_ilu_k(a, k, rule=rule)
+    pattern = _symbolic(a, k, rule)
     t1 = time.perf_counter()
 
     if backend == "oracle":

@@ -31,6 +31,10 @@ pattern (`ILUPattern`) into a :class:`NumericPlan`:
 * the *band superstep schedule*: band-dependency wavefronts grouped by
   owning device, so independent bands factor concurrently and one
   collective per superstep replaces one broadcast per band,
+* the *halo exchange schedule* (:func:`_halo_exchange_schedule`): the
+  sharded-value layout — per-device local storage, halo row sets, and
+  per-superstep egress/ingress maps so devices exchange only the finalized
+  pivot rows another device actually consumes (DESIGN.md §5),
 * static trip-count bounds and the device-major band permutation.
 
 Because the pattern is planning output, column indices are *replicated*
@@ -244,6 +248,7 @@ class NumericPlan:
     diag_pos: np.ndarray  # (n_pad,) int32
     row_len: np.ndarray  # (n_pad,) int32
     a_vals: np.ndarray  # (n_pad, W) f32 — A scattered on the pattern
+    a_scatter_lane: np.ndarray  # (a.nnz,) int64 — lane of each A entry (refactorize)
     pivot_start: np.ndarray  # (n_pad, B+1) int32
     band_of_row: np.ndarray  # (n_pad,) int32
 
@@ -261,10 +266,55 @@ class NumericPlan:
     bands_per_superstep: int  # max bands a single device owns in one superstep
     superstep_bands: np.ndarray  # (n_sup, D, MPD) int32 band ids, B-padded
 
+    # --- sharded value layout + halo exchange schedule (DESIGN.md §5) ------
+    # Per-device value state is ``[local | halo | scratch]``: ``s_loc`` rows
+    # of band-local storage, ``halo_size`` slots of *finalized foreign pivot
+    # rows this device actually consumes*, and one write-off scratch row.
+    # All addresses below are device-local indices into that state.
+    s_loc: int  # local value rows per device (= n_bands//D * band_rows)
+    halo_size: int  # H: max foreign pivot rows any single device consumes
+    egress_max: int  # E: max rows one device ships in one superstep
+    halo_rows: np.ndarray  # (D, H) int64 global row ids per device, sorted
+    piv_addr: np.ndarray  # (n_pad, MP) int32 device-local pivot-read address
+    egress_idx: np.ndarray  # (n_sup, D, E) int32 local gather addrs (pad=scratch)
+    ingress_idx: np.ndarray  # (n_sup, D, D, E) int32 receiver halo addrs (pad=scratch)
+
     # --- band sharding (device-major permutation) -------------------------
     @property
     def bands_per_device(self) -> int:
         return self.n_bands // self.n_devices
+
+    # --- sharded-memory model (README §memory, DESIGN.md §5) --------------
+    @property
+    def state_rows(self) -> int:
+        """Rows of the per-device value state: local + halo + scratch."""
+        return self.s_loc + self.halo_size + 1
+
+    def per_device_value_bytes(self) -> int:
+        """f32 value bytes each device holds during factorization
+        (``O(n_pad*W/D + halo)`` — the sharded layout)."""
+        return self.state_rows * self.width * 4
+
+    def replicated_value_bytes(self) -> int:
+        """What the pre-sharding engine held per device (``n_pad*W`` + scratch)."""
+        return (self.n_pad + 1) * self.width * 4
+
+    def halo_bytes_per_superstep(self, broadcast: str = "gather") -> int:
+        """Wire bytes per device per superstep of the halo exchange
+        (ring-algorithm models, matching ``repro.roofline.analysis``):
+        all-gather of one (E, W) payload per device, or E*W per ppermute hop
+        for the explicit directed ring — both ``(D-1) * E * W * 4``."""
+        d, e, w = self.n_devices, self.egress_max, self.width
+        if d <= 1 or self.halo_size == 0:
+            return 0
+        return (d - 1) * e * w * 4  # same for "gather" and "ring"
+
+    def replicated_bytes_per_superstep(self) -> int:
+        """Wire bytes/device/superstep of the old full-band all-gather."""
+        d = self.n_devices
+        if d <= 1:
+            return 0
+        return (d - 1) * self.bands_per_superstep * self.band_rows * self.width * 4
 
     def band_to_slot(self) -> np.ndarray:
         """slot index (device-major) for each band: band b -> device b%D, slot b//D."""
@@ -283,6 +333,21 @@ class NumericPlan:
         perm = self.band_to_slot()
         banded = x.reshape(self.n_bands, self.band_rows, *x.shape[1:])
         return banded[perm].reshape(x.shape)
+
+    def scatter_values(self, a: CSRMatrix) -> np.ndarray:
+        """New A values (same structure) -> fresh (n_pad, W) pattern values.
+
+        The refactorization path: fill entries zero, padding rows identity,
+        A entries re-read from ``a.data`` through the cached lane map — so
+        cached engines never bake stale values in.
+        """
+        vals = np.zeros_like(self.a_vals)
+        if self.n_pad > self.n:
+            vals[self.n:, 0] = 1.0  # identity padding rows
+        rowlen = np.diff(a.indptr)
+        row_of = np.repeat(np.arange(a.n, dtype=np.int64), rowlen)
+        vals[row_of, self.a_scatter_lane] = a.data
+        return vals
 
 
 def _band_superstep_schedule(pivot_start, band_of_row, n_bands, n_devices):
@@ -321,6 +386,100 @@ def _band_superstep_schedule(pivot_start, band_of_row, n_bands, n_devices):
     return out
 
 
+def _halo_exchange_schedule(piv_rows, diag_pos, band_of_row, superstep_bands,
+                            band_rows, n_bands, n_devices):
+    """Sharded-value layout: halo sets + per-superstep egress/ingress maps.
+
+    Each device stores only the value rows of the bands it owns
+    (``s_loc = n_bands/D * band_rows``) plus a *halo* of finalized foreign
+    pivot rows it actually consumes (precomputed here from the pivot edges
+    and the band superstep schedule). Per superstep, a device *egresses*
+    the rows it just finalized that some other device's halo needs; every
+    receiver scatters the payload into its halo slots via the ingress map.
+    Because band ``b`` is scheduled strictly after every band it reads, a
+    halo row is always exchanged before its first use.
+
+    Returns ``(s_loc, H, E, halo_rows (D,H), piv_addr (n_pad,MP),
+    egress_idx (n_sup,D,E), ingress_idx (n_sup,D,D,E))`` with all addresses
+    device-local into the ``[local | halo | scratch]`` state; the scratch
+    row ``s_loc + H`` absorbs every padded read and write.
+    """
+    n_pad = band_of_row.shape[0]
+    D, R, B = n_devices, band_rows, n_bands
+    n_sup = superstep_bands.shape[0]
+    s_loc = (B // D) * R
+
+    band64 = band_of_row.astype(np.int64)
+    loc_of_row = (band64 // D) * R + np.arange(n_pad, dtype=np.int64) % R
+
+    # superstep each band finalizes in
+    sup_of_band = np.zeros(B, np.int64)
+    flat_b = superstep_bands.reshape(n_sup, -1).astype(np.int64)
+    s_of, _ = np.nonzero(flat_b < B)
+    sup_of_band[flat_b[flat_b < B]] = s_of
+
+    # every (reduced row j, pivot row i) edge
+    MP = piv_rows.shape[1]
+    jj, pp = np.nonzero(np.arange(MP)[None, :] < diag_pos[:, None])
+    ii = piv_rows[jj, pp].astype(np.int64)
+    own_j = band64[jj] % D
+    own_i = band64[ii] % D
+    foreign = own_j != own_i
+
+    # per-device halo: sorted unique foreign pivot rows
+    pairs = np.unique(own_j[foreign] * np.int64(n_pad) + ii[foreign])
+    h_dev = pairs // n_pad
+    h_row = pairs % n_pad
+    h_cnt = np.bincount(h_dev, minlength=D)
+    H = int(h_cnt.max(initial=0))
+    h_start = np.zeros(D, np.int64)
+    np.cumsum(h_cnt[:-1], out=h_start[1:])
+    halo_rows = np.full((D, H), np.int64(n_pad), np.int64)
+    halo_rows[h_dev, np.arange(pairs.size) - h_start[h_dev]] = h_row
+    scratch = s_loc + H
+
+    # device-local pivot-read address per (j, p): own rows at their local
+    # slot, foreign rows at their halo slot, invalid lanes at the scratch row
+    piv_addr = np.full((n_pad, MP), scratch, np.int32)
+    same = ~foreign
+    piv_addr[jj[same], pp[same]] = loc_of_row[ii[same]]
+    if foreign.any():
+        slot = np.searchsorted(pairs, own_j[foreign] * np.int64(n_pad) + ii[foreign])
+        piv_addr[jj[foreign], pp[foreign]] = s_loc + (slot - h_start[own_j[foreign]])
+
+    # egress: each needed row ships once, at its owner's finalize superstep
+    er = np.unique(h_row) if pairs.size else np.zeros(0, np.int64)
+    e_key = sup_of_band[band64[er]] * D + band64[er] % D
+    order = np.lexsort((er, e_key))
+    er_s, key_s = er[order], e_key[order]
+    e_cnt = np.bincount(key_s, minlength=n_sup * D) if er.size else np.zeros(n_sup * D, np.int64)
+    E = int(e_cnt.max(initial=0))
+    e_start = np.zeros(n_sup * D, np.int64)
+    np.cumsum(e_cnt[:-1], out=e_start[1:])
+    egress_rows = np.full((n_sup, D, E), np.int64(-1), np.int64)
+    if er.size:
+        rank = np.arange(er.size) - e_start[key_s]
+        egress_rows[key_s // D, key_s % D, rank] = er_s
+    egress_idx = np.where(
+        egress_rows >= 0, loc_of_row[np.maximum(egress_rows, 0)], np.int64(scratch)
+    ).astype(np.int32)
+
+    # ingress: receiver d scatters each payload row present in its halo
+    ingress_idx = np.full((n_sup, D, D, E), scratch, np.int32)
+    flat_r = egress_rows.reshape(-1)
+    for d in range(D):
+        hr = halo_rows[d][: h_cnt[d]]
+        if hr.size == 0:
+            continue
+        pos = np.searchsorted(hr, np.maximum(flat_r, 0))
+        pos_c = np.minimum(pos, hr.size - 1)
+        hit = (flat_r >= 0) & (pos < hr.size) & (hr[pos_c] == flat_r)
+        ingress_idx[:, d] = np.where(hit, s_loc + pos_c, np.int64(scratch)).reshape(
+            n_sup, D, E
+        ).astype(np.int32)
+    return s_loc, H, E, halo_rows, piv_addr, egress_idx, ingress_idx
+
+
 def make_plan(
     a: CSRMatrix,
     pattern: ILUPattern,
@@ -335,7 +494,7 @@ def make_plan(
     bands = -(-bands // n_devices) * n_devices
     n_pad = bands * band_rows
 
-    cols, vals, diag_pos, row_len, _ = ell_from_pattern(pattern, a, n_pad)
+    cols, vals, diag_pos, row_len, a_lane = ell_from_pattern(pattern, a, n_pad)
     W = cols.shape[1]
 
     # pivot_start[j, b] = #entries of row j with col < b*R, clipped to diag_pos
@@ -360,6 +519,10 @@ def make_plan(
 
     piv_rows, piv_dlane, piv_dst = pivot_gather_maps(cols, diag_pos)
     sched = _band_superstep_schedule(pivot_start, band_of_row, bands, n_devices)
+    s_loc, halo_size, egress_max, halo_rows, piv_addr, egress_idx, ingress_idx = (
+        _halo_exchange_schedule(piv_rows, diag_pos, band_of_row, sched,
+                                band_rows, bands, n_devices)
+    )
 
     return NumericPlan(
         n=n,
@@ -373,6 +536,7 @@ def make_plan(
         diag_pos=diag_pos,
         row_len=row_len,
         a_vals=vals,
+        a_scatter_lane=a_lane,
         pivot_start=pivot_start,
         band_of_row=band_of_row,
         max_pivots_per_band=max(max_inter, 1),
@@ -384,6 +548,13 @@ def make_plan(
         n_supersteps=sched.shape[0],
         bands_per_superstep=sched.shape[2],
         superstep_bands=sched,
+        s_loc=s_loc,
+        halo_size=halo_size,
+        egress_max=egress_max,
+        halo_rows=halo_rows,
+        piv_addr=piv_addr,
+        egress_idx=egress_idx,
+        ingress_idx=ingress_idx,
     )
 
 

@@ -86,17 +86,68 @@ def make_pallas_matvec(cols: jnp.ndarray, vals: jnp.ndarray, n: int) -> Callable
     return matvec
 
 
-def csr_to_ell_arrays(a):
-    """CSRMatrix -> (cols, vals) sentinel-padded ELL arrays (vectorized)."""
+def _csr_to_ell_host(a, n_rows=None):
+    """CSRMatrix -> host (cols, vals) sentinel-padded ELL arrays, with
+    ``n_rows >= a.n`` all-sentinel padding rows (the one ELL scatter every
+    matvec variant shares)."""
+    n_rows = a.n if n_rows is None else n_rows
     lens = np.diff(a.indptr)
     W = max(int(lens.max(initial=0)), 1)
-    cols = np.full((a.n, W), COL_SENTINEL, np.int32)
-    vals = np.zeros((a.n, W), np.float32)
+    cols = np.full((n_rows, W), COL_SENTINEL, np.int32)
+    vals = np.zeros((n_rows, W), np.float32)
     row_of = np.repeat(np.arange(a.n), lens)
     pos = np.arange(a.nnz, dtype=np.int64) - a.indptr[row_of]
     cols[row_of, pos] = a.indices
     vals[row_of, pos] = a.data
+    return cols, vals
+
+
+def csr_to_ell_arrays(a):
+    """CSRMatrix -> (cols, vals) sentinel-padded ELL arrays (vectorized)."""
+    cols, vals = _csr_to_ell_host(a)
     return jnp.asarray(cols), jnp.asarray(vals)
+
+
+def make_sharded_ell_matvec(a, mesh, axis: str = "band") -> Callable:
+    """Row-block sharded ELL SpMV over a 1-D mesh (DESIGN.md §5).
+
+    The ELL storage of A is split into D contiguous row blocks, each placed
+    on its device; ``x`` is replicated (it is O(n) — the factors and the
+    matrix are the memory hogs). Each device reduces its own rows through
+    ``masked_lane_sum`` (the same lanes in the same order as
+    :func:`make_ell_matvec`, so every output entry is bitwise identical to
+    the single-device SpMV) and one ``all_gather`` of the (nb,) results —
+    a copy — assembles the replicated output.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    d = int(mesh.devices.size)
+    n = a.n
+    nb = -(-n // d)
+    cols, vals = _csr_to_ell_host(a, n_rows=d * nb)
+    W = cols.shape[1]
+    sh = NamedSharding(mesh, P(axis, None, None))
+    cols_d = jax.device_put(cols.reshape(d, nb, W), sh)
+    vals_d = jax.device_put(vals.reshape(d, nb, W), sh)
+
+    def mv(c, v, x):
+        xg = jnp.concatenate([x, jnp.zeros((1,), x.dtype)])
+        gathered = xg[jnp.minimum(c[0], n)]
+        y = masked_lane_sum(c[0], v[0], gathered, COL_SENTINEL)  # (nb,)
+        return jax.lax.all_gather(y, axis).reshape(-1)[:n]
+
+    sm = shard_map(
+        mv, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None), P(None)),
+        out_specs=P(None), check_vma=False,
+    )
+
+    def matvec(x):
+        return sm(cols_d, vals_d, x.astype(jnp.float32))
+
+    return matvec
 
 
 def _identity(x):
@@ -345,6 +396,64 @@ def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) ->
         out.append(SolveResult(np.asarray(x[i]), int(tot[i]), r, r <= tol * 1.01,
                                _trim_history(hist[i], int(it[i]), float(bnorm[i]))))
     return out
+
+
+def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
+                  broadcast="psum", method="gmres", tol=1e-5, fact=None, **kw):
+    """Distributed end-to-end solve: sharded TOP-ILU factorize + solve.
+
+    The factorization stays device-resident (``ilu_sharded``), the
+    preconditioner applies through the band-partitioned sharded sweeps, and
+    the SpMV runs row-block sharded — L/U and A are never re-replicated
+    onto one device; only O(n) vectors are. The Krylov iteration itself is
+    the same device-resident engine as the single-device path, so with
+    identical matvec/precond outputs (both bitwise contracts) the iterates
+    — and the solution — are bitwise identical to ``solve_with_ilu``.
+
+    Returns ``(SolveResult, ShardedILUFactorization)``. Factorization and
+    matvec are memoized on the matrix, keyed by mesh devices (and the
+    factorization config), like ``solve_with_ilu``'s caches; pass an
+    already-built ``fact`` (a ``ShardedILUFactorization`` of the same
+    matrix) to reuse it — and its cached precond — directly.
+    """
+    from .api import ilu_sharded
+    from .top_ilu import band_mesh
+
+    if fact is not None:
+        if mesh is not None and not np.array_equal(
+            [d.id for d in mesh.devices.flat],
+            [d.id for d in fact.mesh.devices.flat],
+        ):
+            raise ValueError(
+                "solve_sharded: `fact` was factored on a different mesh than "
+                "`mesh` — the SpMV and the preconditioner must share one mesh")
+        mesh = fact.mesh
+    else:
+        mesh = band_mesh(mesh)
+    mesh_key = tuple(dev.id for dev in mesh.devices.flat)
+    cache = a.__dict__.setdefault("_solve_cache", {})
+    mv_key = ("sharded_matvec", mesh_key)
+    if mv_key not in cache:
+        cache[mv_key] = make_sharded_ell_matvec(a, mesh)
+    matvec = cache[mv_key]
+    precond = None
+    if fact is not None:
+        precond = fact.precond()
+    elif k is not None:
+        f_key = ("sharded_fact", k, rule, band_rows, broadcast, mesh_key)
+        if f_key not in cache:
+            cache[f_key] = ilu_sharded(a, k, rule=rule, band_rows=band_rows,
+                                       mesh=mesh, broadcast=broadcast)
+        fact = cache[f_key]
+        precond = fact.precond()
+    b = jnp.asarray(b, jnp.float32)
+    if b.ndim != 1:
+        raise ValueError(
+            f"solve_sharded supports a single right-hand side (n,), got shape "
+            f"{b.shape}; batched RHS are single-device only (solve_with_ilu)")
+    fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]
+    res = fn(matvec, b, precond, tol=tol, **kw)
+    return res, fact
 
 
 def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,

@@ -272,6 +272,303 @@ def wavefront_sweeps_jnp(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
     return x_u[out_perm]
 
 
+# --------------------------------------------------------------------------
+# band-partitioned triangular plan + sharded preconditioner apply
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ShardedTriangularPlan:
+    """Device-grouped level-major schedule over band-owned rows (DESIGN.md §5).
+
+    The wavefront levels are the same as :class:`TriangularPlan`'s; within
+    each level, rows are grouped by their *band owner* (``(j // R) % D``),
+    so the slot space is ``level × device × rank`` and every per-row table
+    carries a leading device axis that shards over the mesh. L/U **values
+    are never materialized on the host**: each device extracts its own
+    level-major L/U/diag shards from its local factorization ELL block via
+    the ``*_src`` / ``*_lane`` gathers (the ones-lane trick supplies the
+    unit padding diagonal), so the factors stay sharded end-to-end. Only
+    the O(n) sweep vector is replicated — per level, one ``all_gather`` of
+    each device's (maxr,) results extends it, which is a pure copy of f32
+    values and therefore bit-transparent.
+    """
+
+    n: int
+    n_devices: int
+    band_rows: int
+    s_loc: int  # local factor-ELL rows per device
+    width: int  # W — the factorization ELL width
+    nl_levels: int
+    maxr_l: int  # rows per (level, device), L sweep
+    nu_levels: int
+    maxr_u: int
+    WL: int
+    WU: int
+
+    # per-device tables, leading axis D (sharded over the mesh's band axis)
+    l_src: np.ndarray  # (D, nl, maxr_l) int32 — local ELL row (pad -> s_loc)
+    l_lane: np.ndarray  # (D, nl, maxr_l, WL) int32 — ELL lane (pad -> W: zeros)
+    l_cols: np.ndarray  # (D, nl, maxr_l, WL) int32 — slot-space deps (pad -> nl_slots)
+    l_rhs: np.ndarray  # (D, nl, maxr_l) int32 — into b_ext (pad -> n)
+    u_src: np.ndarray  # (D, nu, maxr_u) int32
+    u_lane: np.ndarray  # (D, nu, maxr_u, WU) int32
+    u_cols: np.ndarray  # (D, nu, maxr_u, WU) int32 — slot-space (pad -> nu_slots)
+    u_dlane: np.ndarray  # (D, nu, maxr_u) int32 — diag ELL lane (pad -> W+1: ones)
+    u_rhs: np.ndarray  # (D, nu, maxr_u) int32 — into L slot space (pad -> nl_slots)
+    out_perm: np.ndarray  # (n,) int32: x[j] = x_u_sweep[out_perm[j]] (replicated)
+
+    @property
+    def nl_slots(self) -> int:
+        return self.nl_levels * self.n_devices * self.maxr_l
+
+    @property
+    def nu_slots(self) -> int:
+        return self.nu_levels * self.n_devices * self.maxr_u
+
+    def per_device_factor_bytes(self) -> int:
+        """f32 bytes of L/U/diag value storage each device holds."""
+        return 4 * (self.nl_levels * self.maxr_l * self.WL
+                    + self.nu_levels * self.maxr_u * (self.WU + 1))
+
+
+def build_sharded_triangular_plan(pattern: ILUPattern, band_rows: int,
+                                  n_devices: int) -> ShardedTriangularPlan:
+    """Structure-only host planning for the band-partitioned sweeps.
+
+    Consumes no values — the value gathers it emits are resolved on device
+    against each device's local factorization ELL block, so building the
+    solve plan never pulls the factors off the mesh.
+    """
+    n = pattern.n
+    D, R = n_devices, band_rows
+    bands = -(-n // R)
+    bands = -(-bands // D) * D
+    s_loc = (bands // D) * R
+
+    rowlen = np.diff(pattern.indptr).astype(np.int64)
+    dp = pattern.diag_ptr.astype(np.int64)
+    W = max(int(rowlen.max(initial=0)), 1)
+    WL = max(int(dp.max(initial=0)), 1)
+    WU = max(int((rowlen - dp - 1).max(initial=0)), 1)
+
+    row_of = np.repeat(np.arange(n, dtype=np.int64), rowlen)
+    pos = np.arange(pattern.nnz, dtype=np.int64) - pattern.indptr[row_of]
+    lmask = pos < dp[row_of]
+    umask = pos > dp[row_of]
+    l_cols_rm = np.full((n, WL), COL_SENTINEL, np.int32)
+    l_lane_rm = np.full((n, WL), W, np.int32)  # pad -> the zeros lane
+    l_cols_rm[row_of[lmask], pos[lmask]] = pattern.indices[lmask]
+    l_lane_rm[row_of[lmask], pos[lmask]] = pos[lmask]
+    upos = pos - dp[row_of] - 1
+    u_cols_rm = np.full((n, WU), COL_SENTINEL, np.int32)
+    u_lane_rm = np.full((n, WU), W, np.int32)
+    u_cols_rm[row_of[umask], upos[umask]] = pattern.indices[umask]
+    u_lane_rm[row_of[umask], upos[umask]] = pos[umask]
+
+    l_levels = wavefront_schedule_ell(l_cols_rm, n)
+    u_levels = wavefront_schedule_ell(u_cols_rm, n)
+
+    rows_all = np.arange(n, dtype=np.int64)
+    owner = (rows_all // R) % D
+    loc = (rows_all // R // D) * R + rows_all % R
+
+    def group(levels):
+        """Within each level, group rows by owning device; slot =
+        ``level * (D*maxr) + device * maxr + rank``."""
+        nlev = levels.shape[0]
+        lv, rk = np.nonzero(levels < n)
+        rows = levels[lv, rk].astype(np.int64)
+        own = owner[rows]
+        order = np.lexsort((rows, own, lv))
+        lv_s, own_s, rows_s = lv[order], own[order], rows[order]
+        key = lv_s * D + own_s
+        cnt = np.bincount(key, minlength=nlev * D)
+        maxr = max(int(cnt.max(initial=0)), 1)
+        start = np.zeros(nlev * D, np.int64)
+        np.cumsum(cnt[:-1], out=start[1:])
+        rank = np.arange(rows_s.size, dtype=np.int64) - start[key]
+        table = np.full((D, nlev, maxr), np.int64(n), np.int64)
+        table[own_s, lv_s, rank] = rows_s
+        slot_of = np.zeros(n, np.int64)
+        slot_of[rows_s] = lv_s * (D * maxr) + own_s * maxr + rank
+        return table, slot_of, maxr
+
+    l_tab, slot_l, maxr_l = group(l_levels)
+    u_tab, slot_u, maxr_u = group(u_levels)
+    nl, nu = l_levels.shape[0], u_levels.shape[0]
+    nl_slots = nl * D * maxr_l
+    nu_slots = nu * D * maxr_u
+
+    pad_l = l_tab >= n
+    rows_l = np.minimum(l_tab, max(n - 1, 0))
+    l_src = np.where(pad_l, s_loc, loc[rows_l]).astype(np.int32)
+    l_rhs = np.where(pad_l, n, l_tab).astype(np.int32)
+    lc = np.where(pad_l[..., None], COL_SENTINEL, l_cols_rm[rows_l])
+    l_cols = np.where(
+        lc < COL_SENTINEL, slot_l[np.minimum(lc, max(n - 1, 0))], nl_slots
+    ).astype(np.int32)
+    l_lane = np.where(pad_l[..., None], W, l_lane_rm[rows_l]).astype(np.int32)
+
+    pad_u = u_tab >= n
+    rows_u = np.minimum(u_tab, max(n - 1, 0))
+    u_src = np.where(pad_u, s_loc, loc[rows_u]).astype(np.int32)
+    uc = np.where(pad_u[..., None], COL_SENTINEL, u_cols_rm[rows_u])
+    u_cols = np.where(
+        uc < COL_SENTINEL, slot_u[np.minimum(uc, max(n - 1, 0))], nu_slots
+    ).astype(np.int32)
+    u_lane = np.where(pad_u[..., None], W, u_lane_rm[rows_u]).astype(np.int32)
+    u_dlane = np.where(pad_u, W + 1, dp[rows_u]).astype(np.int32)  # pad -> ones
+    u_rhs = np.where(pad_u, nl_slots, slot_l[rows_u]).astype(np.int32)
+
+    return ShardedTriangularPlan(
+        n=n, n_devices=D, band_rows=R, s_loc=s_loc, width=W,
+        nl_levels=nl, maxr_l=maxr_l, nu_levels=nu, maxr_u=maxr_u, WL=WL, WU=WU,
+        l_src=l_src, l_lane=l_lane, l_cols=l_cols, l_rhs=l_rhs,
+        u_src=u_src, u_lane=u_lane, u_cols=u_cols, u_dlane=u_dlane,
+        u_rhs=u_rhs, out_perm=slot_u.astype(np.int32),
+    )
+
+
+class ShardedTriangularEngine:
+    """Structure-only compiled machinery for the band-partitioned sweeps.
+
+    Owns the placed (sharded) schedule tables and two jitted shard_maps:
+    ``extract`` (local factor ELL block -> level-major L/U/diag value
+    shards, on device) and ``sweep`` (the fused L-then-U level sweep).
+    Built once per structure and cached on the factorization engine entry —
+    refactorizations with new values rebind through the same executables
+    (:class:`ShardedPrecondApply`), retrace-free.
+    """
+
+    AXIS = "band"
+
+    def __init__(self, plan: ShardedTriangularPlan, mesh):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.compat import shard_map
+
+        self.plan = plan
+        self.mesh = mesh
+        ax = self.AXIS
+        D, s_loc, W = plan.n_devices, plan.s_loc, plan.width
+        nl_slots, nu_slots = plan.nl_slots, plan.nu_slots
+        blk_l = D * plan.maxr_l
+        blk_u = D * plan.maxr_u
+
+        def put(x, rank):
+            spec = P(ax, *([None] * (rank - 1)))
+            return jax.device_put(x, NamedSharding(mesh, spec))
+
+        l_src, u_src = put(plan.l_src, 3), put(plan.u_src, 3)
+        l_lane, u_lane = put(plan.l_lane, 4), put(plan.u_lane, 4)
+        u_dlane = put(plan.u_dlane, 3)
+        l_cols, u_cols = put(plan.l_cols, 4), put(plan.u_cols, 4)
+        l_rhs, u_rhs = put(plan.l_rhs, 3), put(plan.u_rhs, 3)
+        out_perm = jnp.asarray(plan.out_perm)
+
+        def extract(loc, ls, ll, us, ul, ud):
+            # local ELL block + a zeros lane (W) and a ones lane (W+1) so
+            # padded gathers land on the right neutral element
+            ext = jnp.zeros((s_loc + 1, W + 2), jnp.float32)
+            ext = ext.at[:s_loc, :W].set(loc[0])
+            ext = ext.at[:, W + 1].set(1.0)
+            lv = ext[ls[0][..., None], ll[0]]  # (nl, maxr_l, WL)
+            uv = ext[us[0][..., None], ul[0]]  # (nu, maxr_u, WU)
+            dg = ext[us[0], ud[0]]  # (nu, maxr_u); pads -> 1.0
+            return lv[None], uv[None], dg[None]
+
+        sm_extract = shard_map(
+            extract, mesh=mesh,
+            in_specs=(P(ax, None, None), P(ax, None, None), P(ax, None, None, None),
+                      P(ax, None, None), P(ax, None, None, None), P(ax, None, None)),
+            out_specs=(P(ax, None, None, None), P(ax, None, None, None),
+                       P(ax, None, None)),
+            check_vma=False,
+        )
+        self.extract = jax.jit(lambda loc: sm_extract(
+            loc, l_src, l_lane, u_src, u_lane, u_dlane))
+
+        def sweep(lc, lv, lr, uc, uv, dg, ur, perm, b):
+            lc, lv, lr = lc[0], lv[0], lr[0]
+            uc, uv, dg, ur = uc[0], uv[0], dg[0], ur[0]
+            b = b.astype(jnp.float32)
+            b_ext = jnp.concatenate([b, jnp.zeros((1,), jnp.float32)])
+            l_r = b_ext[lr]  # (nl, maxr_l)
+
+            def l_step(carry, inp):
+                x, start = carry
+                c, v, r = inp
+                acc = masked_lane_sum(c, v, x[c], nl_slots)
+                y_all = jax.lax.all_gather(r - acc, ax)  # (D, maxr_l) — copy
+                x = jax.lax.dynamic_update_slice(x, y_all.reshape(-1), (start,))
+                return (x, start + blk_l), None
+
+            x_l = jnp.zeros(nl_slots + 1, jnp.float32)
+            (x_l, _), _ = jax.lax.scan(l_step, (x_l, 0), (lc, lv, l_r))
+            u_r = x_l[ur]  # (nu, maxr_u) — y gathered from L slot space
+
+            def u_step(carry, inp):
+                x, start = carry
+                c, v, r, d = inp
+                acc = masked_lane_sum(c, v, x[c], nu_slots)
+                y_all = jax.lax.all_gather((r - acc) / d, ax)
+                x = jax.lax.dynamic_update_slice(x, y_all.reshape(-1), (start,))
+                return (x, start + blk_u), None
+
+            x_u = jnp.zeros(nu_slots + 1, jnp.float32)
+            (x_u, _), _ = jax.lax.scan(u_step, (x_u, 0), (uc, uv, u_r, dg))
+            return x_u[perm]
+
+        sm_sweep = shard_map(
+            sweep, mesh=mesh,
+            in_specs=(P(ax, None, None, None), P(ax, None, None, None),
+                      P(ax, None, None), P(ax, None, None, None),
+                      P(ax, None, None, None), P(ax, None, None),
+                      P(ax, None, None), P(None), P(None)),
+            out_specs=P(None),
+            check_vma=False,
+        )
+        self.sweep = jax.jit(lambda lv, uv, dg, b: sm_sweep(
+            l_cols, lv, l_rhs, u_cols, uv, dg, u_rhs, out_perm,
+            b.astype(jnp.float32)))
+
+
+class ShardedPrecondApply:
+    """Band-partitioned, device-resident application of M^{-1} = (LU)^{-1}.
+
+    Consumes the sharded factorization values in place: L/U/diag shards are
+    extracted *on device* from each device's local ELL block (one jitted
+    shard_map) and stay sharded across every apply. The sweep itself is the
+    same level-major wavefront computation as :class:`PrecondApply` — per
+    row, the same lanes reduced in the same order through
+    ``masked_lane_sum`` — so the result is bitwise equal to the
+    single-device apply; the only distributed step is one per-level
+    ``all_gather`` of finished f32 slot values (a copy, no arithmetic).
+
+    Callable inside outer jitted code (a whole distributed Krylov solve
+    traces into one dispatch). Pass a cached
+    :class:`ShardedTriangularEngine` to rebind new values to the existing
+    compiled executables (the refactorize→solve serving path).
+    """
+
+    def __init__(self, plan: ShardedTriangularPlan, loc_vals, mesh,
+                 engine: Optional[ShardedTriangularEngine] = None):
+        if engine is None:
+            engine = ShardedTriangularEngine(plan, mesh)
+        elif engine.plan is not plan:
+            raise ValueError("ShardedPrecondApply: `engine` was compiled for "
+                             "a different ShardedTriangularPlan than `plan`")
+        self._engine = engine
+        self.plan = engine.plan
+        self.mesh = mesh
+        self.n = self.plan.n
+        self._lv, self._uv, self._dg = self._engine.extract(loc_vals)
+
+    def __call__(self, b):
+        return self._engine.sweep(self._lv, self._uv, self._dg, b)
+
+    apply = __call__
+
+
 def make_triangular_solver(pattern: ILUPattern, vals: np.ndarray,
                            use_pallas: bool = False) -> Callable:
     """Returns jitted ``solve(b) -> x`` applying (LU)^{-1} by substitution.

@@ -34,6 +34,15 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return _mesh((data, model), ("data", "model"))
 
 
+def make_band_mesh(n_devices: int = 0):
+    """1-D ``(band,)`` mesh for the distributed TOP-ILU pipeline
+    (DESIGN.md §5). ``n_devices=0`` takes every available device; bands are
+    owned round-robin over this axis (paper §IV-D) and the factorization
+    value state is sharded along it."""
+    d = n_devices or len(jax.devices())
+    return _mesh((d,), ("band",))
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

@@ -43,6 +43,18 @@ def _dims(leaf) -> tuple:
     return tuple(leaf.shape)
 
 
+def band_shardings(mesh: Mesh, specs: dict) -> dict:
+    """NamedShardings for the band-sharded ILU pipeline (DESIGN.md §5).
+
+    ``specs`` maps array name -> PartitionSpec (the output of
+    ``repro.core.numeric_jax.plan_shard_specs``); placing the host arrays
+    with these *before* the jitted shard_map runs means each device
+    materializes only its own block — the value state, pivot tables, and
+    halo schedules are never replicated across the mesh.
+    """
+    return {k: NamedSharding(mesh, p) for k, p in specs.items()}
+
+
 class ShardingRules:
     def __init__(self, cfg, mesh: Mesh):
         self.cfg = cfg

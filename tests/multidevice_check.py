@@ -1,11 +1,14 @@
 """Subprocess body for multi-device TOP-ILU tests.
 
 Run as:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-         python tests/multidevice_check.py <n> <k> <band_rows> <broadcast>
+         python tests/multidevice_check.py <n> <k> <band_rows> <broadcast> [--solve]
 
-Exits 0 iff the multi-device TOP-ILU factorization is bitwise equal to the
-sequential oracle. (Separate process because the device count is locked at
-first JAX init.)
+Exits 0 iff the multi-device sharded TOP-ILU factorization is bitwise equal
+to the sequential oracle AND each device's value shard has the sharded
+(s_loc, W) shape, not the replicated (n_pad, W) one. With ``--solve`` it
+additionally runs the distributed preconditioner apply + GMRES solve and
+asserts both bitwise equal to the single-device path. (Separate process
+because the device count is locked at first JAX init.)
 """
 import os
 import sys
@@ -15,26 +18,54 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main():
     n, k, band_rows, broadcast = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3]), sys.argv[4]
+    check_solve = "--solve" in sys.argv
     import numpy as np
     import jax
 
     from repro.core import matgen, numeric_ilu_ref, symbolic_ilu_k, pilu1_symbolic
-    from repro.core.top_ilu import topilu_numeric
+    from repro.core.top_ilu import topilu_factor_sharded
 
     devs = jax.devices()
     assert len(devs) >= 2, f"expected multi-device, got {devs}"
     a = matgen(n, density=min(0.08, 12.0 / n), seed=42)
     pat = pilu1_symbolic(a) if k == 1 else symbolic_ilu_k(a, k)
     want = numeric_ilu_ref(a, pat)
-    got = topilu_numeric(a, pat, band_rows=band_rows, broadcast=broadcast)
+    fact = topilu_factor_sharded(a, pat, band_rows=band_rows, broadcast=broadcast)
+    got = fact.values_csr()
     mism = np.nonzero(got.view(np.int32) != want.view(np.int32))[0]
     if mism.size:
         print(f"FAIL: {mism.size}/{want.size} bitwise mismatches; first {mism[:5]}")
         print("got ", got[mism[:5]])
         print("want", want[mism[:5]])
         sys.exit(1)
+
+    # sharded storage: every device holds exactly its (s_loc, W) block
+    plan = fact.plan
+    shapes = {s.data.shape for s in fact.loc_vals.addressable_shards}
+    assert shapes == {(1, plan.s_loc, plan.width)}, shapes
+    assert plan.s_loc == plan.n_pad // len(devs)
+    assert plan.per_device_value_bytes() < plan.replicated_value_bytes()
+
+    if check_solve:
+        from repro.core.api import ilu
+        from repro.core.solvers import solve_with_ilu, solve_sharded
+
+        b = np.random.default_rng(7).standard_normal(n).astype(np.float32)
+        ref_fact = ilu(a, k, backend="jax")
+        y_ref = np.asarray(ref_fact.precond(use_pallas=False)(b))
+        y_sh = np.asarray(fact.precond()(b))
+        assert np.array_equal(y_ref.view(np.int32), y_sh.view(np.int32)), \
+            "sharded precond apply != single-device apply"
+        r_ref, _ = solve_with_ilu(a, b, k=k, tol=1e-6, use_pallas=False)
+        r_sh, _ = solve_sharded(a, b, k=k, band_rows=band_rows, tol=1e-6,
+                                broadcast=broadcast)
+        assert r_sh.converged
+        assert np.array_equal(r_ref.x.view(np.int32), r_sh.x.view(np.int32)), \
+            "distributed solve solution != single-device solution"
+
     print(f"OK: n={n} k={k} band_rows={band_rows} broadcast={broadcast} "
-          f"devices={len(devs)} nnz={pat.nnz} bitwise-equal")
+          f"devices={len(devs)} nnz={pat.nnz} s_loc={plan.s_loc} "
+          f"halo={plan.halo_size} solve={check_solve} bitwise-equal")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,15 @@
 """Plan→compile→execute factorization pipeline: bitwise regression suite.
 
-The PR-2 tentpole contract: every engine emitted from the factorization
-plans — the single-device wavefront engine (``backend="jax"``), the band
-superstep TOP-ILU engine, 1 or 2 devices — produces float32 factor values
-**exactly equal** (int32 view) to the sequential oracle
-``numeric_ilu_ref``, for both level rules, across band sizes; and the
-vectorized symbolic frontier equals the per-row reference pattern-for-
-pattern. 2-device cases run in subprocesses (JAX locks the host device
-count at first init).
+The PR-2/PR-3 tentpole contract: every engine emitted from the
+factorization plans — the single-device wavefront engine
+(``backend="jax"``), the *sharded-value* band superstep TOP-ILU engine on
+1, 2 or 4 devices — produces float32 factor values **exactly equal**
+(int32 view) to the sequential oracle ``numeric_ilu_ref``, for both level
+rules, across band sizes, while each device stores only its band-local
+values + halo; the distributed precond/solve path matches the
+single-device path bitwise; and the vectorized symbolic frontier equals
+the per-row reference pattern-for-pattern. Multi-device cases run in
+subprocesses (JAX locks the host device count at first init).
 """
 import os
 import sys
@@ -126,6 +128,18 @@ def test_refactorize_same_structure_new_values():
     _assert_bitwise(plan.factorize(a2), numeric_ilu_ref(a2, pat))
 
 
+def test_topilu_refactorize_updated_values_not_stale():
+    """The cached sharded engine must re-read a.data on every call: an
+    in-place value update followed by a refactorization yields the new
+    factors, not the first call's."""
+    a = matgen(72, density=0.08, seed=6)
+    f1 = ilu(a, 1, backend="topilu", band_rows=8)
+    a.data[:] = (a.data * 1.5 + 0.25).astype(np.float32)
+    f2 = ilu(a, 1, backend="topilu", band_rows=8)
+    _assert_bitwise(f2.vals, numeric_ilu_ref(a, f2.pattern))
+    assert not np.array_equal(f2.vals.view(np.int32), f1.vals.view(np.int32))
+
+
 # --------------------------------------------------------------------------
 # end-to-end: solve_with_ilu unchanged vs the oracle-backend pipeline
 # --------------------------------------------------------------------------
@@ -144,16 +158,58 @@ def test_solve_with_ilu_end_to_end_unchanged():
 
 
 # --------------------------------------------------------------------------
-# 2-device engines (subprocess; exact == asserted by the check script)
+# sharded factorization (1 device, in-process): device-resident output
 # --------------------------------------------------------------------------
-@pytest.mark.parametrize("k,band_rows", [(1, 8), (1, 32), (2, 8), (2, 32)])
-def test_two_device_bitwise(k, band_rows):
+@pytest.mark.parametrize("rule", ["sum", "max"])
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_sharded_factorization_bitwise_single_device(k, rule):
+    from repro.core.api import ilu_sharded
+
+    a = matgen(96, density=0.06, seed=21 * k + (rule == "max"))
+    pat = _pattern(a, k, rule)
+    want = numeric_ilu_ref(a, pat)
+    fact = ilu_sharded(a, k, rule=rule, band_rows=8)
+    _assert_bitwise(fact.values_csr(), want)
+    # sharded layout invariants hold even at D=1 (halo empty, all local)
+    assert fact.plan.s_loc == fact.plan.n_pad
+    assert fact.plan.halo_size == 0
+
+
+def test_sharded_solve_matches_single_device():
+    from repro.core.solvers import solve_sharded, solve_with_ilu
+
+    a = poisson_2d(10)
+    b = np.random.default_rng(2).standard_normal(a.n).astype(np.float32)
+    r_ref, f_ref = solve_with_ilu(a, b, k=1, tol=1e-6, use_pallas=False)
+    r_sh, f_sh = solve_sharded(a, b, k=1, tol=1e-6)
+    _assert_bitwise(f_sh.values_csr(), f_ref.vals)
+    _assert_bitwise(r_sh.x, r_ref.x)
+    assert r_sh.converged and r_sh.iterations == r_ref.iterations
+
+
+# --------------------------------------------------------------------------
+# multi-device engines (subprocess; exact == asserted by the check script).
+# The sweep is the PR-3 acceptance contract: 1 vs 2 vs 4 devices, sharded
+# value storage, bitwise equal to the oracle; 2-device cases also run the
+# distributed precond+solve against the single-device path.
+# --------------------------------------------------------------------------
+def _run_md(devices, k, band_rows, broadcast="psum", solve=False):
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["JAX_PLATFORMS"] = "cpu"  # don't probe for real TPUs (see test_topilu_multidevice)
-    rc, out, err = run_checked(
-        [sys.executable, MD_SCRIPT, "96", str(k), str(band_rows), "psum"],
-        env=env, timeout=300,
-    )
+    cmd = [sys.executable, MD_SCRIPT, "96", str(k), str(band_rows), broadcast]
+    if solve:
+        cmd.append("--solve")
+    rc, out, err = run_checked(cmd, env=env, timeout=300)
     assert rc == 0, f"stdout:\n{out}\nstderr:\n{err[-2000:]}"
     assert "bitwise-equal" in out
+
+
+@pytest.mark.parametrize("k,band_rows", [(1, 8), (1, 32), (2, 8), (2, 32)])
+def test_two_device_bitwise(k, band_rows):
+    _run_md(2, k, band_rows, solve=(band_rows == 8))
+
+
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_four_device_bitwise(k):
+    _run_md(4, k, band_rows=8)

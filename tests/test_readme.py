@@ -1,0 +1,30 @@
+"""The README cannot drift from the API: its quickstart snippet must run.
+
+Extracts every fenced ```python block from README.md and executes it (the
+quickstart is written to be self-contained and fast). A README edit that
+breaks against the real API fails here, not in a user's shell.
+"""
+import os
+import re
+
+README = os.path.join(os.path.dirname(__file__), "..", "README.md")
+
+_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _python_blocks():
+    with open(README) as f:
+        text = f.read()
+    return _BLOCK_RE.findall(text)
+
+
+def test_readme_exists_and_has_quickstart():
+    blocks = _python_blocks()
+    assert len(blocks) >= 1, "README.md lost its python quickstart block"
+    joined = "\n".join(blocks)
+    assert "ilu(" in joined and "solve_with_ilu" in joined
+
+
+def test_readme_quickstart_runs():
+    for i, block in enumerate(_python_blocks()):
+        exec(compile(block, f"README.md[python block {i}]", "exec"), {})
