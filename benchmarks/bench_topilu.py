@@ -62,6 +62,13 @@ def measure(grid: int, band_rows: int = 16) -> dict:
     plan = fact.plan
     lowered, _ = lower_topilu(a, pat, band_rows, mesh)
     hlo_step = sum(collective_bytes_per_device(lowered.compile().as_text()).values())
+
+    # pad-to-max-E histogram: the fori-loop engine ships a fixed (E, W)
+    # payload every superstep; how much of it is padding on this workload?
+    sizes = plan.egress_sizes()  # (n_sup, D) exact rows shipped
+    hist = np.bincount(sizes.reshape(-1), minlength=plan.egress_max + 1)
+    exact_rows = int(sizes.sum())
+    padded_rows = plan.egress_max * sizes.size
     return {
         "devices": d,
         "n": a.n,
@@ -83,6 +90,13 @@ def measure(grid: int, band_rows: int = 16) -> dict:
         "hlo_collective_bytes_per_superstep": hlo_step,
         "total_collective_bytes_per_device":
             plan.halo_bytes_per_superstep() * plan.n_supersteps,
+        # per-superstep egress histogram: exact E per (step, device) vs the
+        # global max the static loop pads to (ROADMAP "pad to max E" item)
+        "egress_exact_rows": exact_rows,
+        "egress_padded_rows": padded_rows,
+        "egress_pad_fraction":
+            1.0 - exact_rows / padded_rows if padded_rows else 0.0,
+        "egress_size_histogram": {str(i): int(c) for i, c in enumerate(hist) if c},
     }
 
 

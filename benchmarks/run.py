@@ -169,6 +169,46 @@ def bench_topilu(rows, devices=(1, 2, 8)):
     return {"cases": cases, "grid": grid}
 
 
+def bench_sweep(rows, devices=(1, 2, 8)):
+    """Epoch-fused distributed sweep trajectory (PR-4 tentpole).
+
+    One subprocess per simulated device count (the host device count locks
+    at first JAX init); aggregates the sweep-communication records from
+    ``benchmarks/bench_sweep.py`` (collectives/solve, bytes/solve, steady
+    distributed GMRES, serving-warmup latency). Selected by an
+    ``--emit-json`` basename containing ``sweep``.
+    """
+    import subprocess
+
+    grid = 32  # n=1024 — same problem as the BENCH_topilu trajectory
+    child = os.path.join(os.path.dirname(__file__), "bench_sweep.py")
+    cases = []
+    for d in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["_BENCH_SWEEP_CHILD"] = "1"
+        out = subprocess.run(
+            [sys.executable, child, str(grid)], env=env, capture_output=True,
+            text=True, timeout=1800,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(f"bench_sweep D={d} failed:\n{out.stderr[-2000:]}")
+        m = json.loads(out.stdout)
+        cases.append(m)
+        rows.append((f"sweep.gmres_d{d}", m["gmres_steady_seconds"] * 1e6,
+                     f"bitwise={m['bitwise_equal_single_device']} "
+                     f"coll/apply={m['collectives_per_apply']} "
+                     f"(unfused={m['levels_unfused']}) "
+                     f"B/apply={m['bytes_per_apply']} "
+                     f"(pr3={m['bytes_per_apply_unfused_pr3']})"))
+        rows.append((f"sweep.warm_first_solve_d{d}",
+                     m["warm_first_solve_seconds"] * 1e6,
+                     f"batched_ms_per_rhs="
+                     f"{m['gmres_batched_seconds_per_rhs'] * 1e3:.1f}"))
+    return {"cases": cases, "grid": grid}
+
+
 def bench_solver(rows, quick=True):
     """Device-resident preconditioned Krylov engine (PR-1 tentpole)."""
     from benchmarks import bench_ilu as B
@@ -194,24 +234,27 @@ def main() -> None:
         if i >= len(argv) or argv[i].startswith("--"):
             sys.exit("--emit-json requires a file path")
         emit_json = argv[i]
-    cache_dir = os.environ.get("REPRO_JIT_CACHE")
-    if cache_dir:
-        import jax
+    if os.environ.get("REPRO_JIT_CACHE"):
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+        from repro.core.api import enable_jit_cache
 
-        jax.config.update("jax_compilation_cache_dir", cache_dir)
-        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+        enable_jit_cache()
     rows = []
     topilu_metrics = None
-    emit_topilu = emit_json and "topilu" in os.path.basename(emit_json)
-    if emit_topilu:
-        # distributed trajectory only: spawning 3 jax subprocesses is too
+    base = os.path.basename(emit_json) if emit_json else ""
+    if "topilu" in base or "sweep" in base:
+        # distributed trajectories only: spawning 3 jax subprocesses is too
         # slow to fold into every CSV run
-        topilu_metrics = bench_topilu(rows)
+        if "sweep" in base:
+            payload = {"bench": "sweep_epoch_fused", "quick": quick,
+                       "metrics": bench_sweep(rows)}
+        else:
+            topilu_metrics = bench_topilu(rows)
+            payload = {"bench": "topilu_sharded", "quick": quick,
+                       "metrics": topilu_metrics}
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")
-        payload = {"bench": "topilu_sharded", "quick": quick,
-                   "metrics": topilu_metrics}
         with open(emit_json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {emit_json}", file=sys.stderr)

@@ -33,6 +33,33 @@ from .sparse import CSRMatrix, ILUPattern, split_lu
 from .symbolic import symbolic_ilu_k, pilu1_symbolic
 from .numeric_ref import numeric_ilu_ref
 
+_JIT_CACHE_DIR = None
+
+
+def enable_jit_cache(path: str = None) -> bool:
+    """Turn on jax's persistent compilation cache (idempotent per path).
+
+    ``path`` defaults to the ``REPRO_JIT_CACHE`` environment variable; with
+    neither set this is a no-op. An explicit ``path`` always takes effect —
+    re-pointing the cache is allowed. Serving setups call it implicitly
+    through every ``warm`` entry point (``PrecondApply.warm``,
+    ``ShardedPrecondApply.warm``, ``solvers.warm_solve``), making first-use
+    engine jits a once-per-machine cost instead of once-per-process.
+    Returns True iff the cache is (now) enabled.
+    """
+    global _JIT_CACHE_DIR
+    import os
+
+    path = path or os.environ.get("REPRO_JIT_CACHE") or _JIT_CACHE_DIR
+    if not path or path == _JIT_CACHE_DIR:
+        return _JIT_CACHE_DIR is not None
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+    _JIT_CACHE_DIR = path
+    return True
+
 
 @dataclasses.dataclass
 class ILUFactorization:

@@ -53,6 +53,45 @@ def _register_barrier_batching() -> None:
 _register_barrier_batching()
 
 
+def pairwise_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-topology pairwise tree sum over the trailing axis.
+
+    ``jnp.sum`` lowers to an XLA reduce whose accumulation order is
+    implementation-defined per shape/layout — a vmapped (batched) solve and
+    a single solve can round differently. This tree is built from plain
+    elementwise adds with a topology fixed by the input length (zero-padded
+    to the next power of two), so the bits are identical in every context:
+    jit, vmap lanes, shard_map bodies. Cost is log2(n) elementwise adds.
+    """
+    n = x.shape[-1]
+    p = 1 if n <= 1 else 1 << (n - 1).bit_length()
+    if p != n:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, p - n)]
+        x = jnp.pad(x, widths)
+    while x.shape[-1] > 1:
+        x = x[..., ::2] + x[..., 1::2]
+    return x[..., 0]
+
+
+def bitdot(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Bit-reproducible dot product: products rounded to f32 through an
+    ``optimization_barrier`` (no FMA contraction), pairwise-tree summed."""
+    return pairwise_sum(jax.lax.optimization_barrier(x * y))
+
+
+def bitnorm(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-reproducible 2-norm over the trailing axis."""
+    return jnp.sqrt(bitdot(x, x))
+
+
+def barred(x: jnp.ndarray) -> jnp.ndarray:
+    """Round an intermediate product to f32 before it feeds an add —
+    blocks FMA contraction, which XLA applies (or not) per fusion context
+    and would otherwise let a vmapped solve round differently from a
+    single one."""
+    return jax.lax.optimization_barrier(x)
+
+
 _UNROLL = 16  # lanes unrolled per graph node; wider rows scan over chunks
 
 

@@ -121,6 +121,39 @@ def wavefront_schedule(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
     return out
 
 
+def ragged_group(keys: np.ndarray, items: np.ndarray, n_groups: int, pad) -> tuple:
+    """Pack ``items`` into an ``(n_groups, M)`` table by ``keys`` (``M`` =
+    largest group, ``pad``-filled), items ascending within each group.
+    Returns ``(table, counts)`` — the one ragged-ownership layout behind
+    the factorization halo sets, the sweep epoch read sets, and the final
+    output assembly."""
+    keys = np.asarray(keys, np.int64)
+    items = np.asarray(items, np.int64)
+    cnt = np.bincount(keys, minlength=n_groups)
+    M = int(cnt.max(initial=0))
+    start = np.zeros(n_groups, np.int64)
+    np.cumsum(cnt[:-1], out=start[1:])
+    table = np.full((n_groups, M), np.int64(pad), np.int64)
+    if items.size:
+        order = np.lexsort((items, keys))
+        k_s, it_s = keys[order], items[order]
+        table[k_s, np.arange(items.size) - start[k_s]] = it_s
+    return table, cnt
+
+
+def halo_positions(halo_sorted: np.ndarray, flat: np.ndarray, base: int,
+                   scratch: int) -> np.ndarray:
+    """Receiver scatter addresses: ``base`` + position of each ``flat``
+    item in one device's sorted halo list, ``scratch`` when the item is
+    absent from the halo or is payload padding (``flat < 0``)."""
+    if halo_sorted.size == 0:
+        return np.full(flat.shape, np.int64(scratch), np.int64)
+    pos = np.searchsorted(halo_sorted, np.maximum(flat, 0))
+    pos_c = np.minimum(pos, halo_sorted.size - 1)
+    hit = (flat >= 0) & (pos < halo_sorted.size) & (halo_sorted[pos_c] == flat)
+    return np.where(hit, base + pos_c, np.int64(scratch))
+
+
 def wavefront_schedule_ell(dep_cols: np.ndarray, n: int) -> np.ndarray:
     """Wavefronts from sentinel-padded ELL dependency columns (lanes with
     ``dep_cols >= n`` carry no dependency)."""
@@ -316,6 +349,14 @@ class NumericPlan:
             return 0
         return (d - 1) * self.bands_per_superstep * self.band_rows * self.width * 4
 
+    def egress_sizes(self) -> np.ndarray:
+        """Exact egress rows per (superstep, device) — the payload the
+        fori-loop engine pads to the global max ``E``. Feeds the
+        pad-to-max-E histogram in ``benchmarks/bench_topilu.py`` so the
+        tradeoff flagged in ROADMAP.md is measured, not guessed."""
+        scratch = self.s_loc + self.halo_size
+        return (self.egress_idx != scratch).sum(axis=2)
+
     def band_to_slot(self) -> np.ndarray:
         """slot index (device-major) for each band: band b -> device b%D, slot b//D."""
         b = np.arange(self.n_bands)
@@ -430,12 +471,10 @@ def _halo_exchange_schedule(piv_rows, diag_pos, band_of_row, superstep_bands,
     pairs = np.unique(own_j[foreign] * np.int64(n_pad) + ii[foreign])
     h_dev = pairs // n_pad
     h_row = pairs % n_pad
-    h_cnt = np.bincount(h_dev, minlength=D)
-    H = int(h_cnt.max(initial=0))
+    halo_rows, h_cnt = ragged_group(h_dev, h_row, D, n_pad)
+    H = halo_rows.shape[1]
     h_start = np.zeros(D, np.int64)
     np.cumsum(h_cnt[:-1], out=h_start[1:])
-    halo_rows = np.full((D, H), np.int64(n_pad), np.int64)
-    halo_rows[h_dev, np.arange(pairs.size) - h_start[h_dev]] = h_row
     scratch = s_loc + H
 
     # device-local pivot-read address per (j, p): own rows at their local
@@ -450,34 +489,185 @@ def _halo_exchange_schedule(piv_rows, diag_pos, band_of_row, superstep_bands,
     # egress: each needed row ships once, at its owner's finalize superstep
     er = np.unique(h_row) if pairs.size else np.zeros(0, np.int64)
     e_key = sup_of_band[band64[er]] * D + band64[er] % D
-    order = np.lexsort((er, e_key))
-    er_s, key_s = er[order], e_key[order]
-    e_cnt = np.bincount(key_s, minlength=n_sup * D) if er.size else np.zeros(n_sup * D, np.int64)
-    E = int(e_cnt.max(initial=0))
-    e_start = np.zeros(n_sup * D, np.int64)
-    np.cumsum(e_cnt[:-1], out=e_start[1:])
-    egress_rows = np.full((n_sup, D, E), np.int64(-1), np.int64)
-    if er.size:
-        rank = np.arange(er.size) - e_start[key_s]
-        egress_rows[key_s // D, key_s % D, rank] = er_s
+    egress_rows, _ = ragged_group(e_key, er, n_sup * D, -1)
+    E = egress_rows.shape[1]
+    egress_rows = egress_rows.reshape(n_sup, D, E)
     egress_idx = np.where(
         egress_rows >= 0, loc_of_row[np.maximum(egress_rows, 0)], np.int64(scratch)
     ).astype(np.int32)
 
     # ingress: receiver d scatters each payload row present in its halo
-    ingress_idx = np.full((n_sup, D, D, E), scratch, np.int32)
+    ingress_idx = np.empty((n_sup, D, D, E), np.int32)
     flat_r = egress_rows.reshape(-1)
     for d in range(D):
         hr = halo_rows[d][: h_cnt[d]]
-        if hr.size == 0:
-            continue
-        pos = np.searchsorted(hr, np.maximum(flat_r, 0))
-        pos_c = np.minimum(pos, hr.size - 1)
-        hit = (flat_r >= 0) & (pos < hr.size) & (hr[pos_c] == flat_r)
-        ingress_idx[:, d] = np.where(hit, s_loc + pos_c, np.int64(scratch)).reshape(
-            n_sup, D, E
-        ).astype(np.int32)
+        ingress_idx[:, d] = halo_positions(hr, flat_r, s_loc, scratch).reshape(
+            n_sup, D, E).astype(np.int32)
     return s_loc, H, E, halo_rows, piv_addr, egress_idx, ingress_idx
+
+
+# --------------------------------------------------------------------------
+# epoch/read-set schedule for device-grouped level-major sweeps (solve side)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepEpochSchedule:
+    """Collective-epoch schedule for one device-grouped triangular sweep.
+
+    The sweep's slot space is ``level × device × rank`` (slot ``s`` has
+    level ``s // (D·maxr)``, owner ``(s // maxr) % D``, rank ``s % maxr``);
+    each device keeps only its own column of that space — ``n_loc =
+    nlev·maxr`` local slots — plus a *halo* of the ``H`` foreign slots it
+    actually reads (exact read set, host-precomputed) and one scratch slot.
+
+    Consecutive levels fuse into an **epoch** when every cross-device read
+    they perform resolves in an *earlier* epoch; an epoch runs entirely
+    device-locally and ends in ONE exchange of exactly the slots some other
+    device reads downstream (``egress``/``ingress``, ragged per epoch — the
+    epoch loop is unrolled, so payloads are exact, never padded to a global
+    max). Epochs whose egress is empty skip the collective altogether.
+    """
+
+    n_levels: int
+    n_devices: int
+    maxr: int
+    n_loc: int  # local slots per device (= n_levels * maxr)
+    halo: int  # H: max foreign slots any single device reads
+    epoch_bounds: np.ndarray  # (n_epochs + 1,) level boundaries
+    halo_slots: np.ndarray  # (D, H) global slot ids per device, sorted
+    cols_local: np.ndarray  # (D, nlev, maxr, W) device-local deps (pad -> scratch)
+    egress: list  # per epoch: None (nothing read abroad) or (D, E_e) i32 local addrs
+    ingress: list  # per epoch: None or (D, D, E_e) i32 halo addrs (pad -> scratch)
+    egress_slots: list  # per epoch: None or (D, E_e) i64 global slots (pad -> -1)
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.epoch_bounds) - 1
+
+    @property
+    def scratch(self) -> int:
+        return self.n_loc + self.halo
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_levels * self.n_devices * self.maxr
+
+    def exchange_count(self) -> int:
+        """Collectives per sweep (epochs whose read set is non-empty)."""
+        return sum(e is not None for e in self.egress)
+
+    def exchanged_slot_count(self) -> int:
+        """Σ_e E_e — padded payload slots shipped per device per sweep."""
+        return sum(e.shape[1] for e in self.egress if e is not None)
+
+    def slot_was_exchanged(self) -> np.ndarray:
+        """(n_slots,) bool — slots already broadcast by an epoch exchange
+        (an ``all_gather`` leaves them replicated on every device, so a
+        final output assembly never needs to ship them again)."""
+        out = np.zeros(self.n_slots, bool)
+        for es in self.egress_slots:
+            if es is not None:
+                valid = es >= 0
+                out[es[valid]] = True
+        return out
+
+
+def sweep_epoch_schedule(cols: np.ndarray, n_devices: int) -> SweepEpochSchedule:
+    """Build the epoch/read-set schedule from global-slot dependency columns.
+
+    ``cols`` is the ``(D, nlev, maxr, W)`` device-grouped level-major table
+    of dependency *slots* (entries ``>= nlev·D·maxr`` are padding). For
+    every level this computes exactly which finished slots each device
+    reads from another device, fuses maximal runs of levels whose
+    cross-device reads all come from earlier epochs (greedy left-to-right —
+    optimal for contiguous grouping since dependencies only look backward),
+    and emits the per-epoch exact egress/ingress maps.
+    """
+    D = n_devices
+    _, nlev, maxr, _ = cols.shape
+    assert cols.shape[0] == D
+    n_slots = nlev * D * maxr
+    n_loc = nlev * maxr
+    cols64 = cols.astype(np.int64)
+    valid = cols64 < n_slots
+    lev_of = cols64 // (D * maxr)
+    own_of = (cols64 // maxr) % D
+    rank_of = cols64 % maxr
+    reader = np.arange(D, dtype=np.int64)[:, None, None, None]
+    cross = valid & (own_of != reader)
+
+    # --- epoch boundaries: greedy maximal fusion --------------------------
+    max_cross_src = np.full(nlev, -1, np.int64)
+    d_i, l_i, r_i, w_i = np.nonzero(cross)
+    if l_i.size:
+        np.maximum.at(max_cross_src, l_i, lev_of[d_i, l_i, r_i, w_i])
+    starts = [0] if nlev else []
+    for l in range(1, nlev):
+        if max_cross_src[l] >= starts[-1]:
+            starts.append(l)
+    epoch_bounds = np.asarray(starts + [nlev], np.int64)
+    epoch_of_level = np.zeros(max(nlev, 1), np.int64)
+    for e in range(len(starts)):
+        epoch_of_level[epoch_bounds[e]:epoch_bounds[e + 1]] = e
+
+    # --- per-device halo: sorted unique foreign slots actually read -------
+    reader_b = np.broadcast_to(reader, cross.shape)
+    pairs = np.unique(reader_b[cross] * np.int64(n_slots)
+                      + cols64[cross]) if l_i.size else np.zeros(0, np.int64)
+    h_dev = pairs // n_slots
+    h_slot = pairs % n_slots
+    halo_slots, h_cnt = ragged_group(h_dev, h_slot, D, n_slots)
+    H = halo_slots.shape[1]
+    h_start = np.zeros(D, np.int64)
+    np.cumsum(h_cnt[:-1], out=h_start[1:])
+    scratch = n_loc + H
+
+    # --- device-local column remap: own slots at level*maxr + rank, ------
+    # foreign slots at their halo position, padding at the scratch slot
+    local_of_own = lev_of * maxr + rank_of
+    cols_local = np.full(cols.shape, scratch, np.int64)
+    same = valid & (own_of == reader)
+    cols_local[same] = local_of_own[same]
+    if pairs.size:
+        q = reader_b * np.int64(n_slots) + cols64
+        pos = np.searchsorted(pairs, q[cross])
+        cols_local[cross] = n_loc + (pos - h_start[h_dev[pos]])
+    cols_local = cols_local.astype(np.int32)
+
+    # --- per-epoch exact egress/ingress -----------------------------------
+    # a slot ships once, at the end of the epoch that produced it, iff some
+    # other device reads it downstream (all its cross reads are in strictly
+    # later epochs by the fusion rule)
+    fr = np.unique(h_slot) if pairs.size else np.zeros(0, np.int64)
+    egress, ingress, egress_slots = [], [], []
+    for e in range(len(starts)):
+        m = epoch_of_level[fr // (D * maxr)] == e if fr.size else np.zeros(0, bool)
+        se = fr[m]
+        if se.size == 0:
+            egress.append(None)
+            ingress.append(None)
+            egress_slots.append(None)
+            continue
+        slots_e, _ = ragged_group((se // maxr) % D, se, D, -1)
+        E = slots_e.shape[1]
+        eg = np.where(slots_e >= 0,
+                      (slots_e // (D * maxr)) * maxr + slots_e % maxr,
+                      np.int64(scratch)).astype(np.int32)
+        ing = np.empty((D, D, E), np.int32)
+        flat = slots_e.reshape(-1)
+        for d in range(D):
+            hr = halo_slots[d][: h_cnt[d]]
+            ing[d] = halo_positions(hr, flat, n_loc, scratch).reshape(
+                D, E).astype(np.int32)
+        egress.append(eg)
+        ingress.append(ing)
+        egress_slots.append(slots_e)
+
+    return SweepEpochSchedule(
+        n_levels=nlev, n_devices=D, maxr=maxr, n_loc=n_loc, halo=H,
+        epoch_bounds=epoch_bounds, halo_slots=halo_slots,
+        cols_local=cols_local, egress=egress, ingress=ingress,
+        egress_slots=egress_slots,
+    )
 
 
 def make_plan(

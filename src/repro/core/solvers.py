@@ -38,8 +38,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .bitmath import masked_lane_sum
+from .bitmath import barred, bitdot, bitnorm, masked_lane_sum
 from .planner import COL_SENTINEL
+
+def batch_buckets():
+    """RHS batch-size buckets for the serving path — ``REPRO_BATCH_BUCKETS``
+    (comma-separated, ascending) or the powers-of-two default. Bucketing
+    keeps the number of compiled solver/precond shapes bounded: a ragged
+    batch pads up to the nearest bucket (vmap lanes are independent, so
+    zero padding never changes a real lane's bits) instead of minting a new
+    executable per batch size."""
+    import os
+
+    spec = os.environ.get("REPRO_BATCH_BUCKETS", "1,2,4,8,16,32,64")
+    return tuple(sorted(int(t) for t in spec.split(",") if t.strip()))
+
+
+def bucket_batch(nb: int, buckets=None) -> int:
+    """Smallest bucket >= nb (nb itself when it exceeds every bucket)."""
+    buckets = batch_buckets() if buckets is None else tuple(sorted(buckets))
+    for w in buckets:
+        if w >= nb:
+            return w
+    return nb
+
+
+def _pad_rhs_batch(bs, tgt):
+    if bs.shape[0] == tgt:
+        return bs
+    pad = jnp.zeros((tgt - bs.shape[0], bs.shape[1]), bs.dtype)
+    return jnp.concatenate([bs, pad])
+
 
 def _cached_engine(matvec, M, key, build):
     """Compiled-engine memo stored *on the matvec closure itself*: repeated
@@ -266,9 +295,16 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
     assembled from the first ``cnt`` columns only (the tail is masked out of
     the back-substitution) — identical to stopping mid-restart. No
     ``lstsq``, no host synchronization anywhere.
+
+    Every reduction (dots, norms, the V·y combination) and every
+    multiply-feeding-an-add goes through ``core.bitmath`` (pairwise-tree
+    sums, barred products): XLA lowers ``jnp.vdot``/``jnp.sum`` and FMA
+    contraction differently per fusion/batching context, so this is what
+    makes a ``vmap``-batched lane produce exactly the bits of the same
+    solve run alone — the batched-RHS bit-compat contract.
     """
     n = b.shape[0]
-    bnorm = jnp.linalg.norm(b)
+    bnorm = bitnorm(b)
     tolb = tol * bnorm
 
     def inner(x0, r0, beta):
@@ -282,11 +318,11 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
             # modified Gram-Schmidt
             def mgs(i, wh):
                 w, h = wh
-                hij = jnp.vdot(V[i], w) * (i <= j)
-                return w - hij * V[i], h.at[i].set(hij)
+                hij = bitdot(V[i], w) * (i <= j)
+                return w - barred(hij * V[i]), h.at[i].set(hij)
 
             w, h = jax.lax.fori_loop(0, m + 1, mgs, (w, jnp.zeros(m + 1, jnp.float32)))
-            hnext = jnp.linalg.norm(w)
+            hnext = bitnorm(w)
             V = V.at[j + 1].set(w / jnp.maximum(hnext, 1e-30))
             H = H.at[:, j].set(h.at[j + 1].set(hnext))
             return (V, H), None
@@ -302,15 +338,16 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
 
             def rot(i, h):
                 on = i < j
-                hi = cs[i] * h[i] + sn[i] * h[i + 1]
-                hi1 = -sn[i] * h[i] + cs[i] * h[i + 1]
+                hi = barred(cs[i] * h[i]) + barred(sn[i] * h[i + 1])
+                hi1 = barred(-sn[i] * h[i]) + barred(cs[i] * h[i + 1])
                 return (h.at[i].set(jnp.where(on, hi, h[i]))
                          .at[i + 1].set(jnp.where(on, hi1, h[i + 1])))
 
             h = jax.lax.fori_loop(0, m, rot, h)
-            dsafe = jnp.maximum(jnp.sqrt(h[j] ** 2 + h[j + 1] ** 2), 1e-30)
+            dsafe = jnp.maximum(
+                jnp.sqrt(barred(h[j] * h[j]) + barred(h[j + 1] * h[j + 1])), 1e-30)
             c, s = h[j] / dsafe, h[j + 1] / dsafe
-            hcol = h.at[j].set(c * h[j] + s * h[j + 1]).at[j + 1].set(0.0)
+            hcol = h.at[j].set(barred(c * h[j]) + barred(s * h[j + 1])).at[j + 1].set(0.0)
             g = g.at[j + 1].set(-s * g[j]).at[j].set(c * g[j])
             return (cs.at[j].set(c), sn.at[j].set(s), g), (hcol[:m], jnp.abs(g[j + 1]))
 
@@ -329,12 +366,19 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
         def backsub(jj, y):
             j = m - 1 - jj
             rj = R[j] * (jnp.arange(m) > j)
-            num = g_eff[j] - jnp.vdot(rj, y)
+            num = g_eff[j] - bitdot(rj, y)
             den = jnp.where(kmask[j], R[j, j], 1.0)
             return y.at[j].set(num / den)
 
         y = jax.lax.fori_loop(0, m, backsub, jnp.zeros(m, jnp.float32))
-        u = V[:m].T @ y
+
+        # u = V[:m].T @ y as a fixed-order sequential combination (a matmul
+        # reduces over m in a context-dependent order)
+        def axpy(acc, vy):
+            vj, yj = vy
+            return acc + barred(yj * vj), None
+
+        u, _ = jax.lax.scan(axpy, jnp.zeros_like(r0), (V[:m], y))
         return x0 + M(u), cnt
 
     def outer_cond(carry):
@@ -346,7 +390,7 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
         active = (res > tolb) & (it < maxiter)  # freezes converged vmap lanes
         x2, cnt = inner(x, r, res)
         r2 = b - matvec(x2)
-        rtrue = jnp.linalg.norm(r2)
+        rtrue = bitnorm(r2)
         new = (x2, r2, it + 1, rtrue, hist.at[it].set(rtrue), tot + cnt)
         return jax.tree_util.tree_map(
             lambda nw, old: jnp.where(active, nw, old), new, carry
@@ -399,19 +443,30 @@ def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) ->
 
 
 def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
-                  broadcast="psum", method="gmres", tol=1e-5, fact=None, **kw):
+                  broadcast="psum", method="gmres", tol=1e-5, fact=None,
+                  bucket=True, **kw):
     """Distributed end-to-end solve: sharded TOP-ILU factorize + solve.
 
     The factorization stays device-resident (``ilu_sharded``), the
-    preconditioner applies through the band-partitioned sharded sweeps, and
-    the SpMV runs row-block sharded — L/U and A are never re-replicated
+    preconditioner applies through the epoch-fused band-partitioned sweeps,
+    and the SpMV runs row-block sharded — L/U and A are never re-replicated
     onto one device; only O(n) vectors are. The Krylov iteration itself is
     the same device-resident engine as the single-device path, so with
     identical matvec/precond outputs (both bitwise contracts) the iterates
     — and the solution — are bitwise identical to ``solve_with_ilu``.
 
-    Returns ``(SolveResult, ShardedILUFactorization)``. Factorization and
-    matvec are memoized on the matrix, keyed by mesh devices (and the
+    A 2-D ``b`` of shape (nb, n) routes through ``gmres_batched`` over the
+    sharded matvec/precond and returns a list of results: the vmapped
+    engine batches every sweep-epoch and SpMV collective over all
+    right-hand sides (one exchange per epoch for the whole batch). With
+    ``bucket=True`` (default) the batch is zero-padded up to the nearest
+    ``batch_buckets()`` size, so serving traffic with ragged batch shapes
+    reuses a bounded set of compiled engines; padded lanes are independent
+    under vmap and are sliced off, leaving every real column bitwise equal
+    to its per-column solve.
+
+    Returns ``(SolveResult(s), ShardedILUFactorization)``. Factorization
+    and matvec are memoized on the matrix, keyed by mesh devices (and the
     factorization config), like ``solve_with_ilu``'s caches; pass an
     already-built ``fact`` (a ``ShardedILUFactorization`` of the same
     matrix) to reuse it — and its cached precond — directly.
@@ -438,22 +493,66 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
     matvec = cache[mv_key]
     precond = None
     if fact is not None:
-        precond = fact.precond()
+        precond = fact.precond(broadcast=broadcast)
     elif k is not None:
         f_key = ("sharded_fact", k, rule, band_rows, broadcast, mesh_key)
         if f_key not in cache:
             cache[f_key] = ilu_sharded(a, k, rule=rule, band_rows=band_rows,
                                        mesh=mesh, broadcast=broadcast)
         fact = cache[f_key]
-        precond = fact.precond()
+        precond = fact.precond(broadcast=broadcast)
     b = jnp.asarray(b, jnp.float32)
+    if b.ndim == 2:
+        if method != "gmres":
+            raise ValueError(
+                "batched right-hand sides are supported for method='gmres' only")
+        nb = b.shape[0]
+        if bucket:
+            b = _pad_rhs_batch(b, bucket_batch(nb))
+        return gmres_batched(matvec, b, precond, tol=tol, **kw)[:nb], fact
     if b.ndim != 1:
         raise ValueError(
-            f"solve_sharded supports a single right-hand side (n,), got shape "
-            f"{b.shape}; batched RHS are single-device only (solve_with_ilu)")
+            f"solve_sharded expects b of shape (n,) or (batch, n), got {b.shape}")
     fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]
     res = fn(matvec, b, precond, tol=tol, **kw)
     return res, fact
+
+
+def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
+               broadcast="psum", method="gmres", tol=1e-5, sharded=True, **kw):
+    """Serving warmup: pre-compile the whole factorize→precondition→solve
+    stack for the given RHS batch-size buckets, so the first real request
+    of a pre-warmed shape never pays the ~1–2 s first-dispatch XLA compile.
+
+    Factors ``a`` once (cached on the matrix like ``solve_sharded`` /
+    ``solve_with_ilu``), AOT-compiles the preconditioner sweep per bucket
+    (``precond.warm``), then drives one zero-RHS solve per bucket through
+    the real solver entry so the Krylov engine jits land in the same
+    per-matrix caches a live solve will hit. With ``REPRO_JIT_CACHE`` set
+    the compilations persist to disk, making warmup a once-per-machine
+    cost. Returns {batch_size: warmup_seconds}.
+    """
+    import time
+
+    from .api import enable_jit_cache
+
+    enable_jit_cache()
+    out = {}
+    for nb in batch_sizes:
+        t0 = time.perf_counter()
+        tgt = bucket_batch(nb) if nb > 1 else 1
+        zb = np.zeros((tgt, a.n) if nb > 1 else a.n, np.float32)
+        if sharded:
+            _res, fact = solve_sharded(a, zb, k=k, band_rows=band_rows,
+                                       rule=rule, broadcast=broadcast,
+                                       method=method, tol=tol, mesh=mesh, **kw)
+            fact.precond(broadcast=broadcast).warm((tgt,))
+        else:
+            _res, fact = solve_with_ilu(a, zb, k=k, band_rows=band_rows,
+                                        method=method, tol=tol, **kw)
+            fact.precond().warm((tgt,))
+        out[nb] = time.perf_counter() - t0
+    return out
 
 
 def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,

@@ -117,29 +117,36 @@ class ShardedILUFactorization:
         return _values_to_csr_order(
             self.plan, self.pattern, self.plan.rows_from_device_major(dm))
 
-    def precond(self):
+    def precond(self, broadcast: str = "gather"):
         """Cached band-partitioned M^{-1} apply over the sharded values
         (``repro.core.triangular.ShardedPrecondApply``) — L/U storage stays
-        sharded; only the O(n) sweep vector is replicated. The triangular
-        plan and its compiled sweep are structure-keyed (shared across
+        sharded and the sweep vector is device-local; communication follows
+        the epoch/read-set schedule (DESIGN.md §5.5), with ``broadcast``
+        choosing the XLA ``all_gather`` fast path (``"gather"``/``"psum"``)
+        or the explicit ``ppermute`` ring (``"ring"``). The triangular plan
+        and its compiled sweep are structure-keyed (shared across
         refactorizations); this factorization's values bind to them via one
         jitted on-device extract."""
-        if "apply" not in self._preconds:
+        if broadcast == "psum":
+            broadcast = "gather"
+        if broadcast not in self._preconds:
             from .triangular import (
                 ShardedPrecondApply,
                 ShardedTriangularEngine,
                 build_sharded_triangular_plan,
             )
 
-            eng = self._shared.get("tri_engine")
-            if eng is None:
-                tp = build_sharded_triangular_plan(
+            tp = self._shared.get("tri_plan")
+            if tp is None:
+                tp = self._shared["tri_plan"] = build_sharded_triangular_plan(
                     self.pattern, self.plan.band_rows, self.n_devices)
-                eng = self._shared["tri_engine"] = ShardedTriangularEngine(
-                    tp, self.mesh)
-            self._preconds["apply"] = ShardedPrecondApply(
+            eng = self._shared.get(("tri_engine", broadcast))
+            if eng is None:
+                eng = self._shared[("tri_engine", broadcast)] = (
+                    ShardedTriangularEngine(tp, self.mesh, broadcast=broadcast))
+            self._preconds[broadcast] = ShardedPrecondApply(
                 eng.plan, self.loc_vals, self.mesh, engine=eng)
-        return self._preconds["apply"]
+        return self._preconds[broadcast]
 
     def solve(self, b: np.ndarray) -> np.ndarray:
         """Apply the preconditioner: L y = b then U x = y, distributed."""

@@ -35,7 +35,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bitmath import masked_lane_sum
-from .planner import COL_SENTINEL, wavefront_schedule_ell
+from .planner import (
+    COL_SENTINEL,
+    SweepEpochSchedule,
+    ragged_group,
+    sweep_epoch_schedule,
+    wavefront_schedule_ell,
+)
 from .sparse import ILUPattern
 
 
@@ -219,15 +225,54 @@ class PrecondApply:
                 )
         self._apply = jax.jit(lambda b: _raw(b.astype(jnp.float32)))
         self._batched = jax.jit(jax.vmap(self._apply))
+        self._aot = {}
 
     def __call__(self, b):
+        ex = self._aot.get(1)
+        if ex is not None and not isinstance(b, jax.core.Tracer):
+            return ex(jnp.asarray(b, jnp.float32))
         return self._apply(b)
 
     apply = __call__
 
     def batched(self, bs):
-        """Apply M^{-1} to a (batch, n) stack of right-hand sides."""
-        return self._batched(bs)
+        """Apply M^{-1} to a (batch, n) stack of right-hand sides. If
+        ``warm`` prepared a bucket >= batch, the stack is zero-padded to it
+        (vmap lanes are independent — padding never changes a real lane)."""
+        if isinstance(bs, jax.core.Tracer):
+            return self._batched(bs)
+        bs = jnp.asarray(bs, jnp.float32)
+        nb = bs.shape[0]
+        fit = [w for w in self._aot if w != 1 and w >= nb]
+        if not fit:
+            return self._batched(bs)
+        tgt = min(fit)
+        if tgt > nb:
+            bs = jnp.concatenate([bs, jnp.zeros((tgt - nb, self.n), jnp.float32)])
+        return self._aot[tgt](bs)[:nb]
+
+    def warm(self, batch_sizes=(1,)):
+        """AOT-compile the apply for the given RHS batch sizes (1 = the
+        single-RHS apply) and keep the executables for the hot path; with
+        ``REPRO_JIT_CACHE`` set the compilations persist across processes.
+        Returns {batch_size: compile_seconds}."""
+        import time
+
+        from .api import enable_jit_cache
+
+        enable_jit_cache()
+        out = {}
+        for nb in batch_sizes:
+            t0 = time.perf_counter()
+            if nb not in self._aot:
+                if nb == 1:
+                    sds = jax.ShapeDtypeStruct((self.n,), jnp.float32)
+                    self._aot[1] = self._apply.lower(sds).compile()
+                else:
+                    sds = jax.ShapeDtypeStruct((nb, self.n), jnp.float32)
+                    self._aot[nb] = self._batched.lower(sds).compile()
+            out[nb] = time.perf_counter() - t0
+        return out
 
 
 def wavefront_sweeps_jnp(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
@@ -275,6 +320,38 @@ def wavefront_sweeps_jnp(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
 # --------------------------------------------------------------------------
 # band-partitioned triangular plan + sharded preconditioner apply
 # --------------------------------------------------------------------------
+def epoch_sweep_jnp(x, cols, vals, rhs, diag, start, limit):
+    """Device-local level-major scan over one collective epoch.
+
+    ``cols``/``vals``: (L_e, maxr, W) device-local dependency addresses +
+    values; ``rhs``: (L_e, maxr); ``diag``: (L_e, maxr) or None (L sweep —
+    unit diagonal); ``x``: the device-local sweep vector
+    ``[local | halo | scratch]``; ``start``: first write offset (= first
+    level × maxr); ``limit``: the scratch address (lanes at or past it are
+    padding and masked out of the reduction). Shared verbatim by the jnp
+    engine path and the Pallas epoch kernel
+    (`repro.kernels.tri_sweep_epoch`) so the two cannot drift; all
+    reductions go through ``masked_lane_sum`` — the same lanes in the same
+    order as the single-device sweep, hence bitwise equal.
+    """
+    maxr = cols.shape[1]
+
+    def step(carry, inp):
+        x, s = carry
+        if diag is None:
+            c, v, r = inp
+            y = r - masked_lane_sum(c, v, x[c], limit)
+        else:
+            c, v, r, d = inp
+            y = (r - masked_lane_sum(c, v, x[c], limit)) / d
+        x = jax.lax.dynamic_update_slice(x, y, (s,))
+        return (x, s + maxr), None
+
+    inp = (cols, vals, rhs) if diag is None else (cols, vals, rhs, diag)
+    (x, _), _ = jax.lax.scan(step, (x, jnp.int32(start)), inp)
+    return x
+
+
 @dataclasses.dataclass
 class ShardedTriangularPlan:
     """Device-grouped level-major schedule over band-owned rows (DESIGN.md §5).
@@ -286,10 +363,19 @@ class ShardedTriangularPlan:
     are never materialized on the host**: each device extracts its own
     level-major L/U/diag shards from its local factorization ELL block via
     the ``*_src`` / ``*_lane`` gathers (the ones-lane trick supplies the
-    unit padding diagonal), so the factors stay sharded end-to-end. Only
-    the O(n) sweep vector is replicated — per level, one ``all_gather`` of
-    each device's (maxr,) results extends it, which is a pure copy of f32
-    values and therefore bit-transparent.
+    unit padding diagonal), so the factors stay sharded end-to-end.
+
+    Communication follows the **epoch/read-set schedule** (DESIGN.md §5.5,
+    ``planner.sweep_epoch_schedule``): the sweep vector is *device-local*
+    (``[local slots | ingress halo | scratch]``, never replicated),
+    consecutive levels whose cross-device reads all resolve in earlier
+    epochs fuse into one collective epoch, and each epoch ends in ONE
+    exchange of exactly the slots some other device reads downstream. The
+    U right-hand side (the L sweep output at the same row) is always
+    device-local by construction, and the final output assembly ships only
+    the rows *not* already broadcast by an epoch exchange. Every
+    distributed step is a copy of finished f32 values — no arithmetic on
+    the wire — so the result is bitwise equal to the single-device apply.
     """
 
     n: int
@@ -307,14 +393,21 @@ class ShardedTriangularPlan:
     # per-device tables, leading axis D (sharded over the mesh's band axis)
     l_src: np.ndarray  # (D, nl, maxr_l) int32 — local ELL row (pad -> s_loc)
     l_lane: np.ndarray  # (D, nl, maxr_l, WL) int32 — ELL lane (pad -> W: zeros)
-    l_cols: np.ndarray  # (D, nl, maxr_l, WL) int32 — slot-space deps (pad -> nl_slots)
+    l_cols: np.ndarray  # (D, nl, maxr_l, WL) int32 — global-slot deps (pad -> nl_slots)
     l_rhs: np.ndarray  # (D, nl, maxr_l) int32 — into b_ext (pad -> n)
     u_src: np.ndarray  # (D, nu, maxr_u) int32
     u_lane: np.ndarray  # (D, nu, maxr_u, WU) int32
-    u_cols: np.ndarray  # (D, nu, maxr_u, WU) int32 — slot-space (pad -> nu_slots)
+    u_cols: np.ndarray  # (D, nu, maxr_u, WU) int32 — global-slot deps (pad -> nu_slots)
     u_dlane: np.ndarray  # (D, nu, maxr_u) int32 — diag ELL lane (pad -> W+1: ones)
     u_rhs: np.ndarray  # (D, nu, maxr_u) int32 — into L slot space (pad -> nl_slots)
     out_perm: np.ndarray  # (n,) int32: x[j] = x_u_sweep[out_perm[j]] (replicated)
+
+    # --- epoch/read-set communication schedule (DESIGN.md §5.5) -----------
+    l_sched: "SweepEpochSchedule"  # L-sweep epochs + exact egress/ingress
+    u_sched: "SweepEpochSchedule"
+    u_rhs_loc: np.ndarray  # (D, nu, maxr_u) int32 — device-LOCAL L addrs
+    fin_src: np.ndarray  # (D, F) int32 — local U addrs of never-exchanged out rows
+    fin_slots: np.ndarray  # (D, F) int64 — their global U slots (pad -> -1)
 
     @property
     def nl_slots(self) -> int:
@@ -328,6 +421,42 @@ class ShardedTriangularPlan:
         """f32 bytes of L/U/diag value storage each device holds."""
         return 4 * (self.nl_levels * self.maxr_l * self.WL
                     + self.nu_levels * self.maxr_u * (self.WU + 1))
+
+    # --- sweep communication model (asserted against compiled HLO) --------
+    def sweep_collectives_per_apply(self, broadcast: str = "gather") -> int:
+        """Collectives per preconditioner apply: one exchange per non-empty
+        epoch (L + U) plus the final output assembly — versus the
+        ``nl_levels + nu_levels`` per-level gathers of the unfused sweep.
+        The explicit ring runs D-1 ``ppermute`` hops per exchange."""
+        if self.n_devices == 1:
+            return 0
+        ex = (self.l_sched.exchange_count() + self.u_sched.exchange_count()
+              + (1 if self.fin_src.shape[1] else 0))
+        if broadcast == "ring":
+            return ex * (self.n_devices - 1)
+        return ex
+
+    def sweep_payload_slots(self) -> int:
+        """f32 slots shipped per device per apply: the exact epoch read
+        sets plus the final-assembly rows not already broadcast."""
+        return (self.l_sched.exchanged_slot_count()
+                + self.u_sched.exchanged_slot_count()
+                + self.fin_src.shape[1])
+
+    def sweep_bytes_per_apply(self, nb: int = 1) -> int:
+        """Wire bytes per device per apply of a (nb, n) RHS batch — the
+        ring-algorithm model for both collective variants; every collective
+        is amortized across the whole batch."""
+        if self.n_devices == 1:
+            return 0
+        return (self.n_devices - 1) * self.sweep_payload_slots() * 4 * nb
+
+    def sweep_bytes_per_apply_unfused(self, nb: int = 1) -> int:
+        """The PR-3 baseline: one padded (maxr,) all_gather per level."""
+        if self.n_devices == 1:
+            return 0
+        return (self.n_devices - 1) * 4 * nb * (
+            self.nl_levels * self.maxr_l + self.nu_levels * self.maxr_u)
 
 
 def build_sharded_triangular_plan(pattern: ILUPattern, band_rows: int,
@@ -419,12 +548,43 @@ def build_sharded_triangular_plan(pattern: ILUPattern, band_rows: int,
     u_dlane = np.where(pad_u, W + 1, dp[rows_u]).astype(np.int32)  # pad -> ones
     u_rhs = np.where(pad_u, nl_slots, slot_l[rows_u]).astype(np.int32)
 
+    # --- epoch/read-set communication schedule (planner primitive) --------
+    l_sched = sweep_epoch_schedule(l_cols, D)
+    u_sched = sweep_epoch_schedule(u_cols, D)
+
+    # the U right-hand side reads the L output of the *same row*, whose L
+    # slot is owned by the same device — always a device-local address
+    urg = slot_l[rows_u]
+    assert pad_u.all() or (
+        ((urg // maxr_l) % D)[~pad_u]
+        == np.broadcast_to(np.arange(D)[:, None, None], pad_u.shape)[~pad_u]
+    ).all(), "U rhs crossed a device boundary (ownership mismatch)"
+    u_rhs_loc = np.where(
+        pad_u, l_sched.scratch, (urg // (D * maxr_l)) * maxr_l + urg % maxr_l
+    ).astype(np.int32)
+
+    # final output assembly: ship only the U slots of real rows that no
+    # epoch exchange already broadcast (an all_gather leaves its payload
+    # replicated on every device)
+    need = np.zeros(nu_slots, bool)
+    need[slot_u] = True
+    need &= ~u_sched.slot_was_exchanged()
+    ns = np.nonzero(need)[0]
+    fin_slots, _ = ragged_group((ns // maxr_u) % D, ns, D, -1)
+    fin_src = np.where(
+        fin_slots >= 0,
+        (fin_slots // (D * maxr_u)) * maxr_u + fin_slots % maxr_u,
+        np.int64(u_sched.scratch),
+    ).astype(np.int32)
+
     return ShardedTriangularPlan(
         n=n, n_devices=D, band_rows=R, s_loc=s_loc, width=W,
         nl_levels=nl, maxr_l=maxr_l, nu_levels=nu, maxr_u=maxr_u, WL=WL, WU=WU,
         l_src=l_src, l_lane=l_lane, l_cols=l_cols, l_rhs=l_rhs,
         u_src=u_src, u_lane=u_lane, u_cols=u_cols, u_dlane=u_dlane,
         u_rhs=u_rhs, out_perm=slot_u.astype(np.int32),
+        l_sched=l_sched, u_sched=u_sched, u_rhs_loc=u_rhs_loc,
+        fin_src=fin_src, fin_slots=fin_slots,
     )
 
 
@@ -433,7 +593,17 @@ class ShardedTriangularEngine:
 
     Owns the placed (sharded) schedule tables and two jitted shard_maps:
     ``extract`` (local factor ELL block -> level-major L/U/diag value
-    shards, on device) and ``sweep`` (the fused L-then-U level sweep).
+    shards, on device) and ``sweep`` — the **epoch-fused** L-then-U sweep
+    over a *device-local* sweep vector ``[local slots | ingress halo |
+    scratch]``. Per collective epoch the device runs its levels locally,
+    then ONE exchange (XLA ring ``all_gather``, or the explicit ``ppermute``
+    directed ring with ``broadcast="ring"`` — both pure copies) ships
+    exactly the slots some other device reads downstream; the final output
+    assembly ships only the rows no epoch already broadcast. ``sweep``
+    takes a ``(nb, n)`` RHS *batch* and vmaps the per-RHS sweep, so every
+    collective carries the whole batch — one exchange per epoch regardless
+    of how many right-hand sides ride on it.
+
     Built once per structure and cached on the factorization engine entry —
     refactorizations with new values rebind through the same executables
     (:class:`ShardedPrecondApply`), retrace-free.
@@ -441,39 +611,42 @@ class ShardedTriangularEngine:
 
     AXIS = "band"
 
-    def __init__(self, plan: ShardedTriangularPlan, mesh):
+    def __init__(self, plan: ShardedTriangularPlan, mesh,
+                 broadcast: str = "gather", use_pallas: bool = False):
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         from repro.compat import shard_map
+        from repro.launch.sharding import band_put
 
+        if broadcast == "psum":  # historical alias for the XLA fast path
+            broadcast = "gather"
+        assert broadcast in ("gather", "ring")
         self.plan = plan
         self.mesh = mesh
+        self.broadcast = broadcast
+        self.use_pallas = use_pallas
         ax = self.AXIS
         D, s_loc, W = plan.n_devices, plan.s_loc, plan.width
-        nl_slots, nu_slots = plan.nl_slots, plan.nu_slots
-        blk_l = D * plan.maxr_l
-        blk_u = D * plan.maxr_u
+        nu_slots = plan.nu_slots
+        maxr_l, maxr_u = plan.maxr_l, plan.maxr_u
+        ls, us = plan.l_sched, plan.u_sched
 
         def put(x, rank):
-            spec = P(ax, *([None] * (rank - 1)))
-            return jax.device_put(x, NamedSharding(mesh, spec))
+            return band_put(mesh, ax, x, rank)
 
         l_src, u_src = put(plan.l_src, 3), put(plan.u_src, 3)
         l_lane, u_lane = put(plan.l_lane, 4), put(plan.u_lane, 4)
         u_dlane = put(plan.u_dlane, 3)
-        l_cols, u_cols = put(plan.l_cols, 4), put(plan.u_cols, 4)
-        l_rhs, u_rhs = put(plan.l_rhs, 3), put(plan.u_rhs, 3)
-        out_perm = jnp.asarray(plan.out_perm)
 
-        def extract(loc, ls, ll, us, ul, ud):
+        def extract(loc, lsrc, ll, usrc, ul, ud):
             # local ELL block + a zeros lane (W) and a ones lane (W+1) so
             # padded gathers land on the right neutral element
             ext = jnp.zeros((s_loc + 1, W + 2), jnp.float32)
             ext = ext.at[:s_loc, :W].set(loc[0])
             ext = ext.at[:, W + 1].set(1.0)
-            lv = ext[ls[0][..., None], ll[0]]  # (nl, maxr_l, WL)
-            uv = ext[us[0][..., None], ul[0]]  # (nu, maxr_u, WU)
-            dg = ext[us[0], ud[0]]  # (nu, maxr_u); pads -> 1.0
+            lv = ext[lsrc[0][..., None], ll[0]]  # (nl, maxr_l, WL)
+            uv = ext[usrc[0][..., None], ul[0]]  # (nu, maxr_u, WU)
+            dg = ext[usrc[0], ud[0]]  # (nu, maxr_u); pads -> 1.0
             return lv[None], uv[None], dg[None]
 
         sm_extract = shard_map(
@@ -487,49 +660,143 @@ class ShardedTriangularEngine:
         self.extract = jax.jit(lambda loc: sm_extract(
             loc, l_src, l_lane, u_src, u_lane, u_dlane))
 
-        def sweep(lc, lv, lr, uc, uv, dg, ur, perm, b):
-            lc, lv, lr = lc[0], lv[0], lr[0]
-            uc, uv, dg, ur = uc[0], uv[0], dg[0], ur[0]
-            b = b.astype(jnp.float32)
-            b_ext = jnp.concatenate([b, jnp.zeros((1,), jnp.float32)])
-            l_r = b_ext[lr]  # (nl, maxr_l)
+        # --- epoch-fused sweep: placed schedule tables --------------------
+        # (egress/ingress are ragged per epoch — the epoch loop is unrolled,
+        # so every payload has its exact read-set shape, never a global max)
+        def rep32(x, dump):
+            return jnp.asarray(np.where(x >= 0, x, dump).reshape(-1).astype(np.int32))
 
-            def l_step(carry, inp):
-                x, start = carry
-                c, v, r = inp
-                acc = masked_lane_sum(c, v, x[c], nl_slots)
-                y_all = jax.lax.all_gather(r - acc, ax)  # (D, maxr_l) — copy
-                x = jax.lax.dynamic_update_slice(x, y_all.reshape(-1), (start,))
-                return (x, start + blk_l), None
+        tabs = dict(
+            l_cols=put(ls.cols_local, 4), l_rhs=put(plan.l_rhs, 3),
+            u_cols=put(us.cols_local, 4), u_rhs=put(plan.u_rhs_loc, 3),
+            fin_src=put(plan.fin_src, 2),
+            l_eg=[put(e, 2) for e in ls.egress if e is not None],
+            l_ing=[put(i, 3) for i in ls.ingress if i is not None],
+            u_eg=[put(e, 2) for e in us.egress if e is not None],
+            u_ing=[put(i, 3) for i in us.ingress if i is not None],
+            u_rep=[rep32(s, nu_slots) for s in us.egress_slots if s is not None],
+            fin_rep=rep32(plan.fin_slots, nu_slots),
+            out_perm=jnp.asarray(plan.out_perm),
+        )
 
-            x_l = jnp.zeros(nl_slots + 1, jnp.float32)
-            (x_l, _), _ = jax.lax.scan(l_step, (x_l, 0), (lc, lv, l_r))
-            u_r = x_l[ur]  # (nu, maxr_u) — y gathered from L slot space
+        def sp(rank):
+            return P(ax, *([None] * (rank - 1)))
 
-            def u_step(carry, inp):
-                x, start = carry
-                c, v, r, d = inp
-                acc = masked_lane_sum(c, v, x[c], nu_slots)
-                y_all = jax.lax.all_gather((r - acc) / d, ax)
-                x = jax.lax.dynamic_update_slice(x, y_all.reshape(-1), (start,))
-                return (x, start + blk_u), None
+        tab_specs = dict(
+            l_cols=sp(4), l_rhs=sp(3), u_cols=sp(4), u_rhs=sp(3), fin_src=sp(2),
+            l_eg=[sp(2)] * len(tabs["l_eg"]), l_ing=[sp(3)] * len(tabs["l_ing"]),
+            u_eg=[sp(2)] * len(tabs["u_eg"]), u_ing=[sp(3)] * len(tabs["u_ing"]),
+            u_rep=[P(None)] * len(tabs["u_rep"]), fin_rep=P(None), out_perm=P(None),
+        )
 
-            x_u = jnp.zeros(nu_slots + 1, jnp.float32)
-            (x_u, _), _ = jax.lax.scan(u_step, (x_u, 0), (uc, uv, u_r, dg))
-            return x_u[perm]
+        l_bounds = [int(v) for v in ls.epoch_bounds]
+        u_bounds = [int(v) for v in us.epoch_bounds]
+        l_has = [e is not None for e in ls.egress]
+        u_has = [e is not None for e in us.egress]
+
+        if use_pallas:
+            from repro.kernels import ops  # deferred: keep core importable alone
+
+            def local_sweep(x, c, v, r, d, start, limit):
+                return ops.epoch_sweep(x, c, v, r, d, start=start, limit=limit)
+        else:
+            local_sweep = epoch_sweep_jnp
+
+        def broadcast_payload(payload, me):
+            """All-to-all copy of each device's payload — (D, E), identical
+            on every device. No arithmetic touches the wire."""
+            if broadcast == "gather":
+                return jax.lax.all_gather(payload, ax)
+            allp = jnp.zeros((D,) + payload.shape, payload.dtype).at[me].set(payload)
+            cur = payload
+            perm = [(d, (d + 1) % D) for d in range(D)]
+            for hop in range(1, D):  # explicit directed ring (paper Fig 4)
+                cur = jax.lax.ppermute(cur, ax, perm)
+                allp = allp.at[jnp.mod(me - hop, D)].set(cur)
+            return allp
+
+        def sweep(lv, uv, dg, b, t):
+            lv, uv, dg = lv[0], uv[0], dg[0]
+            lc, lr = t["l_cols"][0], t["l_rhs"][0]
+            uc, urh = t["u_cols"][0], t["u_rhs"][0]
+            fin0 = t["fin_src"][0]
+            l_eg = [e[0] for e in t["l_eg"]]
+            l_ing = [i[0] for i in t["l_ing"]]
+            u_eg = [e[0] for e in t["u_eg"]]
+            u_ing = [i[0] for i in t["u_ing"]]
+            me = jax.lax.axis_index(ax)
+
+            def one_rhs(b1):
+                b_ext = jnp.concatenate([b1, jnp.zeros((1,), jnp.float32)])
+                l_r = b_ext[lr]  # (nl, maxr_l)
+                x_l = jnp.zeros(ls.scratch + 1, jnp.float32)
+                k = 0
+                for e in range(ls.n_epochs):
+                    lo, hi = l_bounds[e], l_bounds[e + 1]
+                    x_l = local_sweep(x_l, lc[lo:hi], lv[lo:hi], l_r[lo:hi],
+                                      None, lo * maxr_l, ls.scratch)
+                    if l_has[e] and D > 1:
+                        allp = broadcast_payload(x_l[l_eg[k]], me)
+                        x_l = x_l.at[l_ing[k].reshape(-1)].set(allp.reshape(-1))
+                        k += 1
+                u_r = x_l[urh]  # (nu, maxr_u) — own rows' L output, local
+                x_u = jnp.zeros(us.scratch + 1, jnp.float32)
+                x_rep = jnp.zeros(nu_slots + 1, jnp.float32)
+                k = 0
+                for e in range(us.n_epochs):
+                    lo, hi = u_bounds[e], u_bounds[e + 1]
+                    x_u = local_sweep(x_u, uc[lo:hi], uv[lo:hi], u_r[lo:hi],
+                                      dg[lo:hi], lo * maxr_u, us.scratch)
+                    if u_has[e] and D > 1:
+                        allp = broadcast_payload(x_u[u_eg[k]], me)
+                        x_u = x_u.at[u_ing[k].reshape(-1)].set(allp.reshape(-1))
+                        # epoch payloads are replicated by the exchange:
+                        # fold them into the output vector right away so the
+                        # final assembly never re-ships them
+                        x_rep = x_rep.at[t["u_rep"][k]].set(allp.reshape(-1))
+                        k += 1
+                if fin0.shape[0]:  # F == 0: every out row already broadcast
+                    if D > 1:
+                        allf = broadcast_payload(x_u[fin0], me)  # (D, F)
+                    else:
+                        allf = x_u[fin0][None]
+                    x_rep = x_rep.at[t["fin_rep"]].set(allf.reshape(-1))
+                return x_rep[t["out_perm"]]
+
+            return jax.vmap(one_rhs)(b.astype(jnp.float32))
 
         sm_sweep = shard_map(
             sweep, mesh=mesh,
             in_specs=(P(ax, None, None, None), P(ax, None, None, None),
-                      P(ax, None, None), P(ax, None, None, None),
-                      P(ax, None, None, None), P(ax, None, None),
-                      P(ax, None, None), P(None), P(None)),
-            out_specs=P(None),
+                      P(ax, None, None), P(None, None), tab_specs),
+            out_specs=P(None, None),
             check_vma=False,
         )
-        self.sweep = jax.jit(lambda lv, uv, dg, b: sm_sweep(
-            l_cols, lv, l_rhs, u_cols, uv, dg, u_rhs, out_perm,
-            b.astype(jnp.float32)))
+        self.sweep = jax.jit(lambda lv, uv, dg, b: sm_sweep(lv, uv, dg, b, tabs))
+
+    def sweep_arg_structs(self, nb: int = 1):
+        """ShapeDtypeStructs (with shardings) of the sweep arguments for a
+        (nb, n) RHS batch — the AOT lowering/warmup entry."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        p = self.plan
+        ax = self.AXIS
+
+        def sds(shape, spec):
+            return jax.ShapeDtypeStruct(
+                shape, jnp.float32, sharding=NamedSharding(self.mesh, spec))
+
+        return (
+            sds((p.n_devices, p.nl_levels, p.maxr_l, p.WL), P(ax, None, None, None)),
+            sds((p.n_devices, p.nu_levels, p.maxr_u, p.WU), P(ax, None, None, None)),
+            sds((p.n_devices, p.nu_levels, p.maxr_u), P(ax, None, None)),
+            sds((nb, p.n), P(None, None)),
+        )
+
+    def lower_sweep(self, nb: int = 1):
+        """AOT-lower the epoch-fused sweep for a (nb, n) batch (HLO
+        inspection: the collective count/bytes tests, and ``warm``)."""
+        return self.sweep.lower(*self.sweep_arg_structs(nb))
 
 
 class ShardedPrecondApply:
@@ -541,9 +808,15 @@ class ShardedPrecondApply:
     same level-major wavefront computation as :class:`PrecondApply` — per
     row, the same lanes reduced in the same order through
     ``masked_lane_sum`` — so the result is bitwise equal to the
-    single-device apply; the only distributed step is one per-level
-    ``all_gather`` of finished f32 slot values (a copy, no arithmetic).
+    single-device apply; the only distributed steps are the per-epoch
+    exchanges of exact read-set payloads and one final output assembly, all
+    pure copies of finished f32 values (DESIGN.md §5.5).
 
+    Accepts a single ``(n,)`` right-hand side or an ``(nb, n)`` batch
+    (``batched``); the batch rides through the same epoch schedule, so
+    every collective is amortized across all right-hand sides. ``warm``
+    AOT-compiles the sweep for given batch sizes (serving warmup — with
+    ``REPRO_JIT_CACHE`` set the compilations persist across processes).
     Callable inside outer jitted code (a whole distributed Krylov solve
     traces into one dispatch). Pass a cached
     :class:`ShardedTriangularEngine` to rebind new values to the existing
@@ -551,9 +824,10 @@ class ShardedPrecondApply:
     """
 
     def __init__(self, plan: ShardedTriangularPlan, loc_vals, mesh,
-                 engine: Optional[ShardedTriangularEngine] = None):
+                 engine: Optional[ShardedTriangularEngine] = None,
+                 broadcast: str = "gather"):
         if engine is None:
-            engine = ShardedTriangularEngine(plan, mesh)
+            engine = ShardedTriangularEngine(plan, mesh, broadcast=broadcast)
         elif engine.plan is not plan:
             raise ValueError("ShardedPrecondApply: `engine` was compiled for "
                              "a different ShardedTriangularPlan than `plan`")
@@ -562,11 +836,58 @@ class ShardedPrecondApply:
         self.mesh = mesh
         self.n = self.plan.n
         self._lv, self._uv, self._dg = self._engine.extract(loc_vals)
+        self._aot = {}
+
+    def _sweep(self, b2):
+        nb = b2.shape[0]
+        ex = self._aot.get(nb)
+        if ex is not None and not isinstance(b2, jax.core.Tracer):
+            return ex(self._lv, self._uv, self._dg, b2)
+        return self._engine.sweep(self._lv, self._uv, self._dg, b2)
 
     def __call__(self, b):
-        return self._engine.sweep(self._lv, self._uv, self._dg, b)
+        if getattr(b, "ndim", 1) == 2:
+            return self.batched(b)
+        if isinstance(b, jax.core.Tracer):
+            return self._sweep(b[None, :])[0]
+        b2 = jnp.asarray(np.asarray(b, np.float32).reshape(1, -1))
+        return self._sweep(b2)[0]
 
     apply = __call__
+
+    def batched(self, bs):
+        """Apply M^{-1} to a (nb, n) stack of right-hand sides — one epoch
+        schedule, every collective shared by the whole batch. If ``warm``
+        prepared a bucket >= nb, the batch is zero-padded to it (vmap lanes
+        are independent, so padding never changes a real lane's bits)."""
+        bs = bs if isinstance(bs, jax.core.Tracer) else jnp.asarray(bs, jnp.float32)
+        nb = bs.shape[0]
+        if not isinstance(bs, jax.core.Tracer):
+            fit = [w for w in self._aot if w >= nb]
+            if fit and nb not in self._aot:
+                tgt = min(fit)
+                bs = jnp.concatenate(
+                    [bs, jnp.zeros((tgt - nb, self.n), jnp.float32)])
+        return self._sweep(bs)[:nb]
+
+    def warm(self, batch_sizes=(1,)):
+        """AOT-compile the sweep for the given RHS batch sizes and keep the
+        executables for the serving hot path. Enables jax's persistent
+        compilation cache when ``REPRO_JIT_CACHE`` is set, so a pre-warmed
+        shape never pays the first-dispatch compile — not even in a fresh
+        process. Returns {batch_size: compile_seconds}."""
+        import time
+
+        from .api import enable_jit_cache
+
+        enable_jit_cache()
+        out = {}
+        for nb in batch_sizes:
+            t0 = time.perf_counter()
+            if nb not in self._aot:
+                self._aot[nb] = self._engine.lower_sweep(nb).compile()
+            out[nb] = time.perf_counter() - t0
+        return out
 
 
 def make_triangular_solver(pattern: ILUPattern, vals: np.ndarray,

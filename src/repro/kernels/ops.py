@@ -18,6 +18,7 @@ from . import panel_update as _pu
 from . import spmv_ell as _sp
 from . import tri_solve as _ts
 from . import tri_solve_wavefront as _tw
+from . import tri_sweep_epoch as _te
 from . import ref as _ref
 
 _DISABLED = os.environ.get("REPRO_DISABLE_PALLAS", "0") == "1"
@@ -89,6 +90,21 @@ def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
     if _DISABLED:
         return _ref.tri_solve_wavefront_ref(*args)
     return _tw.tri_solve_wavefront(*args, interpret=_interpret())
+
+
+def epoch_sweep(x, cols, vals, rhs, diag=None, *, start, limit):
+    """Device-local levels of one sweep epoch over ``x`` (bit-compatible).
+
+    The epoch-fused building block of the sharded preconditioner apply:
+    the collectives between epochs stay outside; this is exactly the
+    compute between two exchanges (DESIGN.md §5.5).
+    """
+    if _DISABLED:
+        from repro.core.triangular import epoch_sweep_jnp
+
+        return epoch_sweep_jnp(x, cols, vals, rhs, diag, start, limit)
+    return _te.epoch_sweep(x, cols, vals, rhs, diag, start=start, limit=limit,
+                           interpret=_interpret())
 
 
 def spmv_ell(cols, vals, x, bm=512):

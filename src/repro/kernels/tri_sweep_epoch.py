@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: device-local epoch-fused wavefront sweep.
+
+One launch runs every wavefront level of one *collective epoch* of the
+band-partitioned triangular solve (see ``repro.core.triangular``
+``ShardedTriangularEngine`` and DESIGN.md §5.5): the device-local sweep
+vector ``[local slots | ingress halo | scratch]`` stays resident while the
+epoch's levels scan over it — per level one gather, one masked lane-ordered
+reduction, one contiguous ``dynamic_update_slice``. The collectives between
+epochs stay outside the kernel (XLA owns the exchange); the kernel is
+exactly the compute the device performs between two exchanges.
+
+The kernel body deliberately *shares* its implementation with the jnp
+engine path (``repro.core.triangular.epoch_sweep_jnp``, all reductions via
+``masked_lane_sum``) so the two cannot drift: bit-identity with the
+single-device sweep is by construction.
+
+Caveat: this container runs the kernel in interpret mode
+(``REPRO_PALLAS_INTERPRET=1``, the default); the sharded engine keeps the
+jnp path as its default on CPU (one interpret-mode launch per epoch is an
+interpreter round-trip per epoch — profitable only compiled on real TPU
+hardware, where the epoch's levels fuse into one VMEM-resident launch).
+``REPRO_DISABLE_PALLAS=1`` falls back to the shared jnp implementation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(*refs, start, limit, has_diag):
+    from repro.core.triangular import epoch_sweep_jnp
+
+    if has_diag:
+        x_ref, c_ref, v_ref, r_ref, d_ref, o_ref = refs
+        diag = d_ref[...]
+    else:
+        x_ref, c_ref, v_ref, r_ref, o_ref = refs
+        diag = None
+    o_ref[...] = epoch_sweep_jnp(
+        x_ref[...], c_ref[...], v_ref[...], r_ref[...], diag, start, limit
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("start", "limit", "interpret"))
+def epoch_sweep(x, cols, vals, rhs, diag=None, *, start, limit, interpret=True):
+    """Run one epoch's levels over the device-local sweep vector ``x``.
+
+    ``cols``/``vals``: (L_e, maxr, W) local-address dependencies + values;
+    ``rhs``: (L_e, maxr); ``diag``: (L_e, maxr) for the U sweep or None for
+    the (unit-diagonal) L sweep; ``start``: the epoch's first write offset;
+    ``limit``: the scratch address (mask bound). Returns the updated x.
+    """
+    args = (x, cols, vals, rhs) + (() if diag is None else (diag,))
+    return pl.pallas_call(
+        functools.partial(_kernel, start=start, limit=limit,
+                          has_diag=diag is not None),
+        in_specs=[pl.BlockSpec(a.shape, lambda *_, s=a.shape: (0,) * len(s))
+                  for a in args],
+        out_specs=pl.BlockSpec(x.shape, lambda *_: (0,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(*args)

@@ -55,6 +55,16 @@ def band_shardings(mesh: Mesh, specs: dict) -> dict:
     return {k: NamedSharding(mesh, p) for k, p in specs.items()}
 
 
+def band_put(mesh: Mesh, axis: str, x, rank: int):
+    """Place a rank-``rank`` host table sharded along its leading device
+    axis (``P(axis, None, ...)``) — the placement every per-device schedule
+    table of the sharded factorize/sweep pipeline uses, so no table is ever
+    replicated across the mesh."""
+    assert np.ndim(x) == rank, (np.ndim(x), rank)
+    spec = P(axis, *([None] * (rank - 1)))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
 class ShardingRules:
     def __init__(self, cfg, mesh: Mesh):
         self.cfg = cfg

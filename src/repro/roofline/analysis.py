@@ -99,6 +99,28 @@ def collective_bytes_per_device(hlo_text: str) -> Dict[str, float]:
     return out
 
 
+def collective_op_counts(hlo_text: str) -> Dict[str, int]:
+    """Count collective *ops* per device by kind (async pairs count once).
+
+    The epoch-fused sweep asserts its collective count against the host
+    epoch model with this — XLA cannot merge the exchanges (each epoch
+    depends on the previous one), so the compiled count equals the
+    schedule's.
+    """
+    out: Dict[str, int] = {
+        "all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+        "all-to-all": 0, "collective-permute": 0,
+    }
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count only the -start
+        out[m.group(2)] += 1
+    return out
+
+
 @dataclasses.dataclass
 class RooflineReport:
     arch: str

@@ -1,14 +1,17 @@
 """Subprocess body for multi-device TOP-ILU tests.
 
 Run as:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-         python tests/multidevice_check.py <n> <k> <band_rows> <broadcast> [--solve]
+         python tests/multidevice_check.py <n> <k> <band_rows> <broadcast> \
+             [--solve] [--batch]
 
 Exits 0 iff the multi-device sharded TOP-ILU factorization is bitwise equal
 to the sequential oracle AND each device's value shard has the sharded
 (s_loc, W) shape, not the replicated (n_pad, W) one. With ``--solve`` it
 additionally runs the distributed preconditioner apply + GMRES solve and
-asserts both bitwise equal to the single-device path. (Separate process
-because the device count is locked at first JAX init.)
+asserts both bitwise equal to the single-device path; ``--batch`` further
+runs a ragged multi-RHS ``solve_sharded`` (bucketed batch) and asserts
+every column bitwise equal to its per-column single-device solve.
+(Separate process because the device count is locked at first JAX init.)
 """
 import os
 import sys
@@ -46,7 +49,8 @@ def main():
     assert plan.s_loc == plan.n_pad // len(devs)
     assert plan.per_device_value_bytes() < plan.replicated_value_bytes()
 
-    if check_solve:
+    check_batch = "--batch" in sys.argv
+    if check_solve or check_batch:
         from repro.core.api import ilu
         from repro.core.solvers import solve_with_ilu, solve_sharded
 
@@ -58,14 +62,28 @@ def main():
             "sharded precond apply != single-device apply"
         r_ref, _ = solve_with_ilu(a, b, k=k, tol=1e-6, use_pallas=False)
         r_sh, _ = solve_sharded(a, b, k=k, band_rows=band_rows, tol=1e-6,
-                                broadcast=broadcast)
+                                broadcast=broadcast, fact=fact)
         assert r_sh.converged
         assert np.array_equal(r_ref.x.view(np.int32), r_sh.x.view(np.int32)), \
             "distributed solve solution != single-device solution"
 
+    if check_batch:
+        # ragged batch: 3 RHS pad to the 4-bucket; every real column must
+        # equal its per-column single-device solve bitwise
+        B = np.random.default_rng(8).standard_normal((3, n)).astype(np.float32)
+        rs, _ = solve_sharded(a, B, k=k, band_rows=band_rows, tol=1e-6,
+                              broadcast=broadcast, fact=fact)
+        assert len(rs) == 3
+        for i, r in enumerate(rs):
+            r1, _ = solve_with_ilu(a, B[i], k=k, tol=1e-6, use_pallas=False)
+            assert r.converged and r.iterations == r1.iterations, i
+            assert np.array_equal(r.x.view(np.int32), r1.x.view(np.int32)), \
+                f"batched sharded column {i} != single-device solve"
+
     print(f"OK: n={n} k={k} band_rows={band_rows} broadcast={broadcast} "
           f"devices={len(devs)} nnz={pat.nnz} s_loc={plan.s_loc} "
-          f"halo={plan.halo_size} solve={check_solve} bitwise-equal")
+          f"halo={plan.halo_size} solve={check_solve} batch={check_batch} "
+          f"bitwise-equal")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,12 @@ Asserts, on the simulated D-device mesh:
 * the per-superstep collective payload in the *compiled HLO* (both
   broadcast variants) equals exactly the host-precomputed halo size
   ``(D-1) * E * W * 4`` bytes — the collective ships the pivot-row halo,
-  nothing more.
+  nothing more;
+* the *sweep* (epoch-fused preconditioner apply, DESIGN.md §5.5): compiled
+  HLO collective count == the host epoch model (one exchange per non-empty
+  epoch + the final assembly, strictly fewer than the ``nl + nu`` per-level
+  gathers), and compiled collective bytes == the exact read-set model —
+  for a single RHS and for a batch riding the same collectives.
 """
 import os
 import sys
@@ -60,12 +65,32 @@ def main():
         # only when every row of every finished band is consumed downstream)
         assert model <= lplan.replicated_bytes_per_superstep(), broadcast
 
+    # --- sweep: compiled collectives == the epoch/read-set model ----------
+    from repro.roofline.analysis import collective_op_counts
+
+    ap = fact.precond()
+    tp = ap.plan
+    for nb in (1, 3):
+        hlo = ap._engine.lower_sweep(nb).compile().as_text()
+        got_bytes = sum(collective_bytes_per_device(hlo).values())
+        want_bytes = tp.sweep_bytes_per_apply(nb)
+        assert got_bytes == want_bytes, ("sweep bytes", nb, got_bytes, want_bytes)
+        got_cnt = sum(collective_op_counts(hlo).values())
+        want_cnt = tp.sweep_collectives_per_apply()
+        assert got_cnt == want_cnt, ("sweep count", nb, got_cnt, want_cnt)
+        # fused below the per-level schedule, payloads within the old model
+        assert got_cnt < tp.nl_levels + tp.nu_levels
+        assert want_bytes <= tp.sweep_bytes_per_apply_unfused(nb)
+
     print(f"OK: devices={d} n={n} band_rows={band_rows} s_loc={plan.s_loc} "
           f"halo={plan.halo_size} E={plan.egress_max} "
           f"state_bytes={plan.per_device_value_bytes()} "
           f"replicated_bytes={plan.replicated_value_bytes()} "
           f"halo_B/step={plan.halo_bytes_per_superstep()} "
-          f"old_B/step={plan.replicated_bytes_per_superstep()} sharded-memory")
+          f"old_B/step={plan.replicated_bytes_per_superstep()} "
+          f"sweep_coll={tp.sweep_collectives_per_apply()}/"
+          f"{tp.nl_levels + tp.nu_levels} "
+          f"sweep_B={tp.sweep_bytes_per_apply()} sharded-memory")
 
 
 if __name__ == "__main__":

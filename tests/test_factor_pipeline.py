@@ -187,29 +187,73 @@ def test_sharded_solve_matches_single_device():
     assert r_sh.converged and r_sh.iterations == r_ref.iterations
 
 
+@pytest.mark.parametrize("k", [0, 1, 2])
+def test_batched_sharded_solve_bitwise(k, monkeypatch):
+    """Multi-RHS sharded solves: every column of a ragged (bucketed) batch
+    must equal its per-column single-device solve bitwise — the padded
+    vmap lanes are independent and sliced off."""
+    from repro.core.solvers import bucket_batch, solve_sharded, solve_with_ilu
+
+    monkeypatch.delenv("REPRO_BATCH_BUCKETS", raising=False)
+    a = matgen(96, density=0.06, seed=31 + k)
+    B = np.random.default_rng(3 + k).standard_normal((3, a.n)).astype(np.float32)
+    assert bucket_batch(3) == 4  # ragged: rides the 4-bucket
+    rs, fact = solve_sharded(a, B, k=k, band_rows=8, tol=1e-6)
+    assert len(rs) == 3
+    for i, r in enumerate(rs):
+        r1, _ = solve_with_ilu(a, B[i], k=k, tol=1e-6, use_pallas=False)
+        assert r.converged and r.iterations == r1.iterations
+        _assert_bitwise(r.x, r1.x)
+    # the batch shares the factorization and its cached precond
+    rs2, fact2 = solve_sharded(a, B, k=k, band_rows=8, tol=1e-6, fact=fact)
+    assert fact2 is fact
+    for r, r2 in zip(rs, rs2):
+        _assert_bitwise(r2.x, r.x)
+
+
+def test_warm_solve_prepares_serving_buckets():
+    """warm_solve pre-compiles the solve stack; a fresh RHS of a warmed
+    bucket reuses the cached engines (identical bits, no new shapes)."""
+    from repro.core.solvers import solve_sharded, solve_with_ilu, warm_solve
+
+    a = poisson_2d(8)
+    warm_solve(a, k=1, batch_sizes=(1, 2), band_rows=8, tol=1e-6)
+    b = np.random.default_rng(5).standard_normal(a.n).astype(np.float32)
+    r, fact = solve_sharded(a, b, k=1, band_rows=8, tol=1e-6)
+    r1, _ = solve_with_ilu(a, b, k=1, tol=1e-6, use_pallas=False)
+    assert r.converged
+    _assert_bitwise(r.x, r1.x)
+    # the sharded precond was AOT-warmed for the single-RHS shape
+    assert 1 in fact.precond()._aot
+
+
 # --------------------------------------------------------------------------
 # multi-device engines (subprocess; exact == asserted by the check script).
 # The sweep is the PR-3 acceptance contract: 1 vs 2 vs 4 devices, sharded
 # value storage, bitwise equal to the oracle; 2-device cases also run the
 # distributed precond+solve against the single-device path.
 # --------------------------------------------------------------------------
-def _run_md(devices, k, band_rows, broadcast="psum", solve=False):
+def _run_md(devices, k, band_rows, broadcast="psum", solve=False, batch=False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["JAX_PLATFORMS"] = "cpu"  # don't probe for real TPUs (see test_topilu_multidevice)
     cmd = [sys.executable, MD_SCRIPT, "96", str(k), str(band_rows), broadcast]
     if solve:
         cmd.append("--solve")
-    rc, out, err = run_checked(cmd, env=env, timeout=300)
+    if batch:
+        cmd.append("--batch")
+    rc, out, err = run_checked(cmd, env=env, timeout=600)
     assert rc == 0, f"stdout:\n{out}\nstderr:\n{err[-2000:]}"
     assert "bitwise-equal" in out
 
 
 @pytest.mark.parametrize("k,band_rows", [(1, 8), (1, 32), (2, 8), (2, 32)])
 def test_two_device_bitwise(k, band_rows):
-    _run_md(2, k, band_rows, solve=(band_rows == 8))
+    # the band_rows=8 cases also cover the ragged multi-RHS distributed solve
+    _run_md(2, k, band_rows, solve=(band_rows == 8), batch=(band_rows == 8))
 
 
 @pytest.mark.parametrize("k", [0, 1, 2])
 def test_four_device_bitwise(k):
-    _run_md(4, k, band_rows=8)
+    # k=2 additionally runs the batched distributed solve on 4 devices
+    _run_md(4, k, band_rows=8, solve=(k == 2), batch=(k == 2))

@@ -234,3 +234,54 @@ def test_wavefront_kernel_bit_identical_to_triangular_solver(seed, k):
             dev["u_vals"], dev["u_diag"], dev["u_rhs_idx"], dev["out_perm"],
             jnp.asarray(b))
     _assert_bitwise(ops.tri_solve_wavefront(*args), ref.tri_solve_wavefront_ref(*args))
+
+
+def _epoch_args(k=1, seed=5):
+    """Real epoch tables from a sharded triangular plan (D=1: one epoch per
+    sweep, every address local) + synthetic values."""
+    from repro.core import matgen, symbolic_ilu_k
+    from repro.core.triangular import build_sharded_triangular_plan
+
+    a = matgen(96, density=0.06, seed=seed)
+    pat = symbolic_ilu_k(a, k)
+    plan = build_sharded_triangular_plan(pat, 8, 1)
+    s = plan.l_sched
+    rng = np.random.default_rng(seed + 1)
+    cols = jnp.asarray(s.cols_local[0])
+    vals = jnp.asarray(rng.standard_normal(cols.shape).astype(np.float32))
+    rhs = jnp.asarray(rng.standard_normal(cols.shape[:2]).astype(np.float32))
+    diag = jnp.asarray((rng.standard_normal(cols.shape[:2]) + 3).astype(np.float32))
+    x0 = jnp.zeros(s.scratch + 1, jnp.float32)
+    return x0, cols, vals, rhs, diag, s.scratch
+
+
+@pytest.mark.parametrize("with_diag", [False, True])
+def test_epoch_sweep_kernel_bitwise(with_diag):
+    """The epoch-fused sweep kernel == the shared jnp implementation, bit
+    for bit, for both the L (unit-diagonal) and U (divide) variants."""
+    from repro.core.triangular import epoch_sweep_jnp
+    from repro.kernels import tri_sweep_epoch as te
+
+    x0, cols, vals, rhs, diag, scratch = _epoch_args()
+    d = diag if with_diag else None
+    want = epoch_sweep_jnp(x0, cols, vals, rhs, d, 0, scratch)
+    got = te.epoch_sweep(x0, cols, vals, rhs, d, start=0, limit=scratch,
+                         interpret=True)
+    _assert_bitwise(got, want)
+    # the ops wrapper (REPRO_DISABLE_PALLAS escape hatch shares the impl)
+    _assert_bitwise(ops.epoch_sweep(x0, cols, vals, rhs, d, start=0,
+                                    limit=scratch), want)
+
+
+@pytest.mark.pallas_compiled
+@pytest.mark.parametrize("with_diag", [False, True])
+def test_compiled_epoch_sweep_bitwise(with_diag):
+    from repro.core.triangular import epoch_sweep_jnp
+    from repro.kernels import tri_sweep_epoch as te
+
+    x0, cols, vals, rhs, diag, scratch = _epoch_args(k=2, seed=9)
+    d = diag if with_diag else None
+    want = epoch_sweep_jnp(x0, cols, vals, rhs, d, 0, scratch)
+    got = te.epoch_sweep(x0, cols, vals, rhs, d, start=0, limit=scratch,
+                         interpret=False)
+    _assert_bitwise(got, want)

@@ -82,6 +82,60 @@ def test_halo_filled_before_first_use(k):
         assert (write_step[slot] < read_step).all()
 
 
+@pytest.mark.parametrize("d", [1, 2, 4])
+@pytest.mark.parametrize("k", [1, 2])
+def test_sweep_epoch_schedule_invariants(d, k):
+    """Host-side invariants of the epoch/read-set sweep schedule
+    (DESIGN.md §5.5): epochs tile the levels, every cross-device read
+    resolves in a strictly earlier epoch, every halo slot is written
+    exactly once, and the exact read-set payload never exceeds the PR-3
+    per-level padded model."""
+    from repro.core import matgen, pilu1_symbolic, symbolic_ilu_k
+    from repro.core.triangular import build_sharded_triangular_plan
+
+    a = matgen(128, density=0.08, seed=11)
+    pat = pilu1_symbolic(a) if k == 1 else symbolic_ilu_k(a, k)
+    plan = build_sharded_triangular_plan(pat, 8, d)
+    for sched, cols, nlev, maxr in (
+        (plan.l_sched, plan.l_cols, plan.nl_levels, plan.maxr_l),
+        (plan.u_sched, plan.u_cols, plan.nu_levels, plan.maxr_u),
+    ):
+        assert sched.epoch_bounds[0] == 0 and sched.epoch_bounds[-1] == nlev
+        assert (np.diff(sched.epoch_bounds) > 0).all()
+        # cross-device reads come from strictly earlier epochs
+        cols64 = cols.astype(np.int64)
+        valid = cols64 < sched.n_slots
+        own = (cols64 // maxr) % d
+        lev = cols64 // (d * maxr)
+        rd = np.arange(d)[:, None, None, None]
+        cross = valid & (own != rd)
+        eol = np.zeros(nlev, np.int64)
+        for e in range(sched.n_epochs):
+            eol[sched.epoch_bounds[e]:sched.epoch_bounds[e + 1]] = e
+        di, li, ri, wi = np.nonzero(cross)
+        if li.size:
+            assert (eol[lev[di, li, ri, wi]] < eol[li]).all()
+        # every halo slot of every device is written exactly once overall
+        for dev in range(d):
+            written = []
+            for ing in sched.ingress:
+                if ing is not None:
+                    w = ing[dev][ing[dev] < sched.scratch] - sched.n_loc
+                    written.extend(w.tolist())
+            n_halo = int((sched.halo_slots[dev] < sched.n_slots).sum())
+            assert sorted(written) == list(range(n_halo))
+        # egress addresses point into local slots (or scratch padding)
+        for eg in sched.egress:
+            if eg is not None:
+                assert ((eg < sched.n_loc) | (eg == sched.scratch)).all()
+    if d > 1:
+        assert plan.sweep_collectives_per_apply() < plan.nl_levels + plan.nu_levels
+        assert plan.sweep_bytes_per_apply() <= plan.sweep_bytes_per_apply_unfused()
+    else:
+        assert plan.sweep_collectives_per_apply() == 0
+        assert plan.sweep_bytes_per_apply() == 0
+
+
 def test_memory_model_monotone_in_devices():
     """Per-device value bytes shrink as the mesh grows (the §IV point).
 

@@ -137,6 +137,23 @@ def test_batched_rejects_non_gmres():
         solve_with_ilu(a, B, k=1, method="cg")
 
 
+def test_batch_buckets_env(monkeypatch):
+    """Serving batch buckets: env-configurable, ragged sizes round up, and
+    batches beyond every bucket keep their exact size."""
+    from repro.core.solvers import batch_buckets, bucket_batch
+
+    monkeypatch.delenv("REPRO_BATCH_BUCKETS", raising=False)
+    assert batch_buckets() == (1, 2, 4, 8, 16, 32, 64)
+    assert bucket_batch(1) == 1
+    assert bucket_batch(3) == 4
+    assert bucket_batch(33) == 64
+    assert bucket_batch(100) == 100  # past the largest bucket: exact
+    monkeypatch.setenv("REPRO_BATCH_BUCKETS", "2, 6")
+    assert batch_buckets() == (2, 6)
+    assert bucket_batch(3) == 6
+    assert bucket_batch(7) == 7
+
+
 def test_factorization_caches_precond_and_solver():
     """The triangular plan/compiled apply must be built once per
     factorization and reused across solves (the PR-1 plan-cache layer)."""

@@ -128,6 +128,29 @@ def test_precond_apply_batched_bitwise():
     np.testing.assert_array_equal(got.view(np.int32), want.view(np.int32))
 
 
+def test_precond_apply_warm_aot_bitwise():
+    """AOT warmup must be behavior-invariant: warmed (bucketed) applies
+    return exactly the bits of the unwarmed path, for the single-RHS shape
+    and for a ragged batch padded up to a warmed bucket."""
+    from repro.core.triangular import PrecondApply
+
+    a, pat, vals = _setup(n=70, k=1, seed=6)
+    apply = PrecondApply(pat, vals, use_pallas=False)
+    b = np.random.default_rng(7).standard_normal(a.n).astype(np.float32)
+    B = np.random.default_rng(8).standard_normal((3, a.n)).astype(np.float32)
+    want1 = np.asarray(apply(b))
+    wantB = np.asarray(apply.batched(B))
+    secs = apply.warm((1, 4))
+    assert set(secs) == {1, 4} and set(apply._aot) == {1, 4}
+    got1 = np.asarray(apply(b))  # AOT executable
+    gotB = np.asarray(apply.batched(B))  # ragged 3 -> bucket 4, sliced back
+    np.testing.assert_array_equal(got1.view(np.int32), want1.view(np.int32))
+    np.testing.assert_array_equal(gotB.view(np.int32), wantB.view(np.int32))
+    assert gotB.shape == (3, a.n)
+    # warming again is free (executables cached)
+    assert apply.warm((4,))[4] < 0.5
+
+
 def test_jacobi_converges_to_exact():
     a, pat, vals = _setup(k=1)
     b = np.random.default_rng(2).standard_normal(a.n).astype(np.float32)
