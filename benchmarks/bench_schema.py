@@ -1,0 +1,191 @@
+"""Checked-in schemas for the committed ``BENCH_*.json`` trajectories.
+
+The README's perf tables are generated from these files; a malformed
+trajectory commit used to break them silently. ``benchmarks/run.py
+--smoke`` validates every committed trajectory against the schemas here,
+so CI fails loudly instead.
+
+Hand-rolled validation (the container deliberately has no ``jsonschema``):
+a schema is a dict mirroring the JSON shape —
+
+* a *type* (or tuple of types) validates a scalar leaf,
+* a dict validates a dict: every schema key must be present (extra data
+  keys are allowed — trajectories grow fields PR over PR),
+* a one-element list ``[item_schema]`` validates a non-empty list,
+  item-wise.
+
+``bool`` leaves accept only real booleans (bool is not int here);
+numeric leaves accept int/float but never bool.
+"""
+from __future__ import annotations
+
+NUM = (int, float)
+
+_SWEEP_CASE = {
+    "devices": int,
+    "n": int,
+    "grid": int,
+    "k": int,
+    "band_rows": int,
+    "batch": int,
+    "bitwise_equal_single_device": bool,
+    "iterations": int,
+    "levels_unfused": int,
+    "epochs": int,
+    "collectives_per_apply": int,
+    "hlo_collectives_per_apply": int,
+    "bytes_per_apply": int,
+    "hlo_bytes_per_apply": NUM,  # summed from per-op HLO estimates (float)
+    "bytes_per_apply_unfused_pr3": int,
+    "bytes_per_apply_batched": int,
+    "warm_seconds": NUM,
+    "warm_first_solve_seconds": NUM,
+    "precond_apply_steady_seconds": NUM,
+    "gmres_steady_seconds": NUM,
+    "gmres_batched_seconds_per_rhs": NUM,
+    # PR 5: the ordering axis — modeled epochs/bytes per (structure,
+    # ordering) plus measured apply latency for the ordered Poisson solves
+    "orderings": {
+        "poisson": [{
+            "ordering": str,
+            "levels": int,
+            "epochs": int,
+            "collectives_per_apply": int,
+            "bytes_per_apply": int,
+            "fill_nnz": int,
+            "precond_apply_steady_seconds": NUM,
+            "bitwise_equal_single_device_permuted": bool,
+        }],
+        "random": [{
+            "ordering": str,
+            "levels": int,
+            "epochs": int,
+            "collectives_per_apply": int,
+            "bytes_per_apply": int,
+            "fill_nnz": int,
+        }],
+    },
+}
+
+_TOPILU_CASE = {
+    "devices": int,
+    "n": int,
+    "grid": int,
+    "k": int,
+    "band_rows": int,
+    "bitwise_equal_oracle": bool,
+    "n_supersteps": int,
+    "s_loc": int,
+    "halo_size": int,
+    "egress_max": int,
+    "per_device_value_bytes": int,
+    "replicated_value_bytes": int,
+    "halo_bytes_per_superstep": int,
+    "replicated_bytes_per_superstep": int,
+    "factor_first_seconds": NUM,
+    "factor_steady_seconds": NUM,
+    "egress_pad_fraction": NUM,
+    # PR 5: factorization-side ordering axis (model-only)
+    "orderings": [{
+        "ordering": str,
+        "n_supersteps": int,
+        "halo_bytes_per_superstep": int,
+        "per_device_value_bytes": int,
+        "fill_nnz": int,
+    }],
+}
+
+_FACTOR_CASE = {
+    "n": int,
+    "nnz": int,
+    "fill_nnz": int,
+    "rounds": int,
+    "max_ops": int,
+    "symbolic_seconds": NUM,
+    "plan_build_seconds": NUM,
+    "numeric_first_seconds": NUM,
+    "numeric_steady_seconds": NUM,
+    "oracle_numeric_seconds": NUM,
+    "steady_speedup_vs_oracle": NUM,
+    "bitwise_equal_oracle": bool,
+}
+
+#: filename -> schema of the committed trajectory
+SCHEMAS = {
+    "BENCH_sweep.json": {
+        "bench": str,
+        "quick": bool,
+        "metrics": {"grid": int, "cases": [_SWEEP_CASE]},
+    },
+    "BENCH_topilu.json": {
+        "bench": str,
+        "quick": bool,
+        "metrics": {"grid": int, "cases": [_TOPILU_CASE]},
+    },
+    "BENCH_factor.json": {
+        "bench": str,
+        "quick": bool,
+        "metrics": {"cases": [_FACTOR_CASE]},
+        "solver_engine": {
+            "precond_apply_seconds": NUM,
+            "gmres_steady_solve_seconds": NUM,
+            "gmres_first_solve_seconds": NUM,
+            "converged": bool,
+        },
+    },
+}
+
+
+def _check(value, schema, path, errors):
+    if isinstance(schema, dict):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected object, got {type(value).__name__}")
+            return
+        for key, sub in schema.items():
+            if key not in value:
+                errors.append(f"{path}.{key}: missing")
+            else:
+                _check(value[key], sub, f"{path}.{key}", errors)
+    elif isinstance(schema, list):
+        if not isinstance(value, list):
+            errors.append(f"{path}: expected list, got {type(value).__name__}")
+            return
+        if not value:
+            errors.append(f"{path}: empty list")
+            return
+        for i, item in enumerate(value):
+            _check(item, schema[0], f"{path}[{i}]", errors)
+    else:  # a type or tuple of types
+        if schema is bool:
+            ok = isinstance(value, bool)
+        elif isinstance(value, bool):  # bool must not satisfy numeric leaves
+            ok = False
+        else:
+            ok = isinstance(value, schema)
+        if not ok:
+            want = getattr(schema, "__name__", schema)
+            errors.append(
+                f"{path}: expected {want}, got {type(value).__name__} ({value!r})")
+
+
+def validate_payload(payload, name: str) -> list:
+    """Validate a decoded trajectory against its schema. Returns errors."""
+    if name not in SCHEMAS:
+        return [f"{name}: no schema registered (known: {sorted(SCHEMAS)})"]
+    errors: list = []
+    _check(payload, SCHEMAS[name], name.removesuffix(".json"), errors)
+    return errors
+
+
+def validate_file(path: str) -> list:
+    """Validate one committed trajectory file. Returns a list of errors."""
+    import json
+    import os
+
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{name}: unreadable ({e})"]
+    return validate_payload(payload, name)

@@ -12,7 +12,12 @@ the sharded preconditioner on the simulated mesh:
 * steady preconditioner-apply and distributed-GMRES wall times (single RHS
   and an 8-RHS batch riding the same collectives);
 * serving warmup — ``warm_solve`` wall time and the first fresh-RHS solve
-  latency after it (the "pre-warmed shape never pays the compile" number).
+  latency after it (the "pre-warmed shape never pays the compile" number);
+* the **ordering axis** (PR 5): modeled epochs/collectives/bytes per apply
+  for natural vs RCM vs fusion-aware row ordering on the Poisson *and* a
+  random matgen structure (quantifying the ROADMAP "2-3x fusion" item),
+  plus measured steady apply latency and a bitwise-vs-single-device-
+  permuted assert for every ordered Poisson solve.
 
 ``benchmarks/run.py --emit-json BENCH_sweep.json`` aggregates 1/2/8 devices
 into the committed trajectory.
@@ -37,11 +42,34 @@ import time
 import numpy as np
 
 
+def _model_axis(mat, band_rows: int, d: int) -> list:
+    """Modeled sweep communication per ordering (host-only, nothing
+    compiled — the same epoch/read-set model the HLO tests pin)."""
+    from repro.core.ordering import make_ordering, permuted_system, sweep_comm_model
+    from repro.core.symbolic import pilu1_symbolic
+
+    out = []
+    for name in ("natural", "rcm", "fusion"):
+        ordering = make_ordering(mat, name, n_devices=d, band_rows=band_rows)
+        mp = mat if ordering is None else permuted_system(mat, ordering)
+        pat = pilu1_symbolic(mp)
+        rec = sweep_comm_model(pat, band_rows, d)
+        out.append({
+            "ordering": name,
+            "levels": rec["levels"],
+            "epochs": rec["epochs"],
+            "collectives_per_apply": rec["collectives_per_apply"],
+            "bytes_per_apply": rec["bytes_per_apply"],
+            "fill_nnz": pat.nnz,
+        })
+    return out
+
+
 def measure(grid: int, band_rows: int = 16, batch: int = 8) -> dict:
     import jax
 
-    from repro.core import poisson_2d
-    from repro.core.api import ilu, ilu_sharded
+    from repro.core import matgen, poisson_2d
+    from repro.core.ordering import make_ordering, permuted_system
     from repro.core.solvers import solve_sharded, solve_with_ilu, warm_solve
     from repro.roofline.analysis import (
         collective_bytes_per_device,
@@ -101,6 +129,38 @@ def measure(grid: int, band_rows: int = 16, batch: int = 8) -> dict:
     gmres_batched = time.perf_counter() - t0
     assert all(r.converged for r in rb)
 
+    # --- ordering axis: model on two structures + measured Poisson latency -
+    orderings = {
+        "poisson": _model_axis(a, band_rows, d),
+        "random": _model_axis(matgen(a.n, density=0.006, seed=3),
+                              band_rows, d),
+    }
+    for rec in orderings["poisson"]:
+        name = rec["ordering"]
+        if name == "natural":
+            o_apply, o_b, r_o = fact.precond(), b, res
+        else:
+            ordering = make_ordering(a, name, n_devices=d, band_rows=band_rows)
+            r_o, o_fact = solve_sharded(a, b, k=1, band_rows=band_rows,
+                                        tol=1e-6, ordering=ordering)
+            o_apply = o_fact.precond()
+            o_b = ordering.permute_vector(b)
+        # ordered distributed solve == single-device solve of the same
+        # permuted system (the PR's bitwise acceptance contract)
+        ap_mat = a if name == "natural" else permuted_system(
+            a, make_ordering(a, name, n_devices=d, band_rows=band_rows))
+        r_1, _ = solve_with_ilu(ap_mat, o_b, k=1, tol=1e-6, use_pallas=False)
+        x_sh = r_o.x if name == "natural" else r_o.x[
+            make_ordering(a, name, n_devices=d, band_rows=band_rows).perm]
+        rec["bitwise_equal_single_device_permuted"] = bool(
+            np.array_equal(x_sh.view(np.int32), r_1.x.view(np.int32)))
+        np.asarray(o_apply(o_b))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = o_apply(o_b)
+        jax.block_until_ready(out)
+        rec["precond_apply_steady_seconds"] = (time.perf_counter() - t0) / reps
+
     # --- communication model vs compiled HLO -------------------------------
     plan = ap.plan
     hlo = ap._engine.lower_sweep(1).compile().as_text()
@@ -132,6 +192,8 @@ def measure(grid: int, band_rows: int = 16, batch: int = 8) -> dict:
         "precond_apply_batched_seconds_per_rhs": apply_batched_steady / batch,
         "gmres_steady_seconds": gmres_steady,
         "gmres_batched_seconds_per_rhs": gmres_batched / batch,
+        # ordering axis: natural vs rcm vs fusion on two structures
+        "orderings": orderings,
     }
 
 

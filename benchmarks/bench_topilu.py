@@ -97,7 +97,32 @@ def measure(grid: int, band_rows: int = 16) -> dict:
         "egress_pad_fraction":
             1.0 - exact_rows / padded_rows if padded_rows else 0.0,
         "egress_size_histogram": {str(i): int(c) for i, c in enumerate(hist) if c},
+        # ordering axis (PR 5, model-only — the halo model is exactly what
+        # the HLO check above pins): factorization-side communication under
+        # natural vs RCM vs fusion-aware row ordering
+        "orderings": _ordering_axis(a, band_rows, d),
     }
+
+
+def _ordering_axis(a, band_rows: int, d: int) -> list:
+    """Modeled factorization communication per row ordering (host-only)."""
+    from repro.core import pilu1_symbolic
+    from repro.core.ordering import factor_comm_model, make_ordering, permuted_system
+
+    out = []
+    for name in ("natural", "rcm", "fusion"):
+        ordering = make_ordering(a, name, n_devices=d, band_rows=band_rows)
+        ap = a if ordering is None else permuted_system(a, ordering)
+        pat = pilu1_symbolic(ap)
+        rec = factor_comm_model(ap, pat, band_rows, d)
+        out.append({
+            "ordering": name,
+            "n_supersteps": rec["n_supersteps"],
+            "halo_bytes_per_superstep": rec["halo_bytes_per_superstep"],
+            "per_device_value_bytes": rec["per_device_value_bytes"],
+            "fill_nnz": rec["fill_nnz"],
+        })
+    return out
 
 
 def main():

@@ -35,7 +35,7 @@ import time
 
 import numpy as np
 
-from repro.roofline.analysis import LINK_BW, PEAK_FLOPS, HBM_BW, collective_bytes_per_device
+from repro.roofline.analysis import LINK_BW, PEAK_FLOPS, collective_bytes_per_device
 
 
 def exact_op_counts(a, pattern):
@@ -59,7 +59,6 @@ def main():
     import jax
 
     from repro.core import matgen, pilu1_symbolic, numeric_ilu_ref
-    from repro.core.planner import make_plan
     from repro.core.top_ilu import lower_topilu, topilu_numeric
 
     n = int(sys.argv[1]) if len(sys.argv) > 1 else 2048

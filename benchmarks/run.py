@@ -1,6 +1,13 @@
 """Benchmark harness — one entry per paper table/figure + kernel microbench.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--emit-json PATH]
+    PYTHONPATH=src python -m benchmarks.run --smoke [--emit-json PATH]
+
+``--smoke`` is the CI gate: validate every committed ``BENCH_*.json``
+trajectory against the checked-in schemas (``benchmarks/bench_schema.py``)
+without running anything heavy (no jax import), so a malformed trajectory
+commit fails CI instead of silently breaking the README tables. With
+``--emit-json`` it also writes the validation report.
 
 Prints ``name,us_per_call,derived`` CSV. Paper-table benches report their
 headline derived quantity (a speedup or a ratio); kernel benches report
@@ -206,6 +213,15 @@ def bench_sweep(rows, devices=(1, 2, 8)):
                      m["warm_first_solve_seconds"] * 1e6,
                      f"batched_ms_per_rhs="
                      f"{m['gmres_batched_seconds_per_rhs'] * 1e3:.1f}"))
+        by_name = {r["ordering"]: r for r in m["orderings"]["poisson"]}
+        for name in ("rcm", "fusion"):
+            r = by_name[name]
+            rows.append((f"sweep.ordering_{name}_d{d}",
+                         r["precond_apply_steady_seconds"] * 1e6,
+                         f"epochs={r['epochs']} "
+                         f"(natural={by_name['natural']['epochs']}) "
+                         f"B/apply={r['bytes_per_apply']} "
+                         f"bitwise={r['bitwise_equal_single_device_permuted']}"))
     return {"cases": cases, "grid": grid}
 
 
@@ -225,6 +241,31 @@ def bench_solver(rows, quick=True):
     return m
 
 
+def smoke(emit_json=None) -> int:
+    """Validate the committed BENCH_*.json trajectories against the
+    checked-in schemas. Returns the number of invalid files (CI exit code).
+    Deliberately light: no jax import, runs in seconds."""
+    from benchmarks.bench_schema import SCHEMAS, validate_file
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    report = {}
+    bad = 0
+    for name in sorted(SCHEMAS):
+        path = os.path.join(root, name)
+        errors = validate_file(path)
+        report[name] = {"ok": not errors, "errors": errors}
+        status = "ok" if not errors else f"INVALID ({len(errors)} errors)"
+        print(f"bench-schema,{name},{status}")
+        for e in errors[:20]:
+            print(f"  {e}", file=sys.stderr)
+        bad += bool(errors)
+    if emit_json:
+        with open(emit_json, "w") as f:
+            json.dump({"bench": "schema_smoke", "results": report}, f, indent=2)
+        print(f"wrote {emit_json}", file=sys.stderr)
+    return bad
+
+
 def main() -> None:
     argv = sys.argv[1:]
     quick = "--full" not in argv
@@ -234,6 +275,8 @@ def main() -> None:
         if i >= len(argv) or argv[i].startswith("--"):
             sys.exit("--emit-json requires a file path")
         emit_json = argv[i]
+    if "--smoke" in argv:
+        sys.exit(smoke(emit_json))
     if os.environ.get("REPRO_JIT_CACHE"):
         sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
         from repro.core.api import enable_jit_cache

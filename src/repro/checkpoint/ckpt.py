@@ -29,7 +29,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -116,7 +116,7 @@ def restore(ckpt_dir: str, step: Optional[int], like: Any,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
-    by_key = {l["key"]: l for l in manifest["leaves"]}
+    by_key = {leaf["key"]: leaf for leaf in manifest["leaves"]}
     keys = [k for k, _ in _tree_paths(like)]
     leaves = []
     for k in keys:

@@ -10,7 +10,7 @@ from __future__ import annotations
 import functools
 
 try:  # jax >= 0.6: public top-level API
-    from jax import shard_map  # type: ignore[attr-defined]
+    from jax import shard_map  # noqa: F401  # type: ignore[attr-defined]
 except ImportError:  # pragma: no cover - depends on installed jax
     from jax.experimental.shard_map import shard_map as _shard_map
 

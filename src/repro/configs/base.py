@@ -11,7 +11,6 @@ Vocab sizes are padded to a multiple of 256 for model-axis divisibility;
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Tuple
 
 import jax

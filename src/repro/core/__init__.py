@@ -5,3 +5,11 @@ from .matgen import matgen, poisson_2d, convection_diffusion_2d  # noqa: F401
 from .symbolic import symbolic_ilu_k, symbolic_ilu_k_ref, pilu1_symbolic  # noqa: F401
 from .factor_plan import FactorPlan, build_factor_plan, factor_plan_for  # noqa: F401
 from .numeric_ref import numeric_ilu_ref, numeric_ilu_dense_oracle, ilu_residual  # noqa: F401
+from .ordering import (  # noqa: F401
+    Ordering,
+    choose_band_rows,
+    fusion_aware_ordering,
+    natural_ordering,
+    permute_csr,
+    rcm_ordering,
+)

@@ -20,6 +20,14 @@ The whole ``factorize → precond → solve`` pipeline is plan→compile→execu
 (DESIGN.md §3): each stage's plan and compiled engine are cached — the
 ``FactorPlan`` on the matrix, the ``PrecondApply`` on the factorization —
 so repeated use retraces nothing.
+
+``ordering=`` (both entry points) runs the pipeline on a symmetrically
+permuted system ``P A Pᵀ`` (DESIGN.md §Ordering): ``"rcm"``, ``"fusion"``
+(the fusion-aware subdomain layout from ``repro.core.ordering``), an
+explicit permutation, or ``None``/``"natural"``. The permutation is
+applied once at plan time and cached on the matrix; the factorization is
+bitwise-equal to sequential ILU(k) of the *permuted* matrix, and
+``solve`` un/permutes ``b``/``x`` at the boundary (pure gathers).
 """
 from __future__ import annotations
 
@@ -63,12 +71,19 @@ def enable_jit_cache(path: str = None) -> bool:
 
 @dataclasses.dataclass
 class ILUFactorization:
+    """Host-side factorization. With an ordering, ``a``/``pattern``/``vals``
+    all describe the *permuted* system ``P A Pᵀ`` (the bit-compat contract
+    is relative to that row order); ``solve`` handles the boundary."""
+
     a: CSRMatrix
     k: int
     pattern: ILUPattern
     vals: np.ndarray  # CSR-aligned filled values
     symbolic_seconds: float
     numeric_seconds: float
+    # the row ordering the system was permuted with (None = natural);
+    # solve() permutes b / unpermutes x so callers stay in original space
+    ordering: Optional["Ordering"] = None
     # lazily built PrecondApply instances, keyed by use_pallas — the
     # triangular plan + compiled sweep are built once and reused across
     # every solve/restart/RHS batch against this factorization
@@ -89,11 +104,20 @@ class ILUFactorization:
     def solve(self, b: np.ndarray) -> np.ndarray:
         """Apply the preconditioner: solve L y = b, then U x = y.
 
-        Batched input (batch, n) is vmapped through the same cached plan."""
+        Batched input (batch, n) is vmapped through the same cached plan.
+        With an ordering, ``b`` is permuted in and ``x`` un-permuted out
+        (pure gathers), so the caller stays in original row order."""
         apply = self.precond()
+        b = np.asarray(b, np.float32)
+        if self.ordering is not None:
+            b = self.ordering.permute_vector(b)
         if np.ndim(b) == 2:
-            return np.asarray(apply.batched(np.asarray(b, np.float32)))
-        return np.asarray(apply(np.asarray(b, np.float32)))
+            out = np.asarray(apply.batched(b))
+        else:
+            out = np.asarray(apply(b))
+        if self.ordering is not None:
+            out = self.ordering.unpermute_vector(out)
+        return out
 
     @property
     def nnz(self) -> int:
@@ -106,6 +130,20 @@ def _symbolic(a: CSRMatrix, k: int, rule: str):
     return symbolic_ilu_k(a, k, rule=rule)
 
 
+def _resolve_ordering(a: CSRMatrix, ordering, n_devices: int, band_rows: int):
+    """Resolve ``ordering=`` and return ``(system, Ordering-or-None)``.
+
+    The permuted matrix is cached on ``a`` (``ordering.permuted_system``),
+    so repeated calls with one ordering reuse one matrix object — and with
+    it every plan/engine cache hanging off it."""
+    from .ordering import make_ordering, permuted_system
+
+    ord_ = make_ordering(a, ordering, n_devices=n_devices, band_rows=band_rows)
+    if ord_ is None:
+        return a, None
+    return permuted_system(a, ord_), ord_
+
+
 def ilu_sharded(
     a: CSRMatrix,
     k: int,
@@ -113,15 +151,22 @@ def ilu_sharded(
     band_rows: int = 32,
     mesh=None,
     broadcast: str = "psum",
+    ordering=None,
 ):
     """Distributed factorization whose output **stays sharded on the mesh**
     (``repro.core.top_ilu.ShardedILUFactorization``): each device holds only
     its bands' factor values, the preconditioner applies in place, and
     ``values_csr()`` gathers to the host only on explicit request. Bitwise
     contract identical to every other backend. ``mesh=None`` builds a 1-D
-    band mesh over all available devices."""
-    from .top_ilu import topilu_factor_sharded
+    band mesh over all available devices. ``ordering=`` permutes the system
+    once at plan time (``"fusion"`` targets this mesh's band ownership, so
+    sweep epochs fuse — see ``repro.core.ordering``); the sharded factors
+    then equal sequential ILU(k) of the permuted matrix bitwise, and
+    ``solve`` un/permutes at the boundary."""
+    from .top_ilu import band_mesh, topilu_factor_sharded
 
+    mesh = band_mesh(mesh)
+    a, ord_ = _resolve_ordering(a, ordering, int(mesh.devices.size), band_rows)
     t0 = time.perf_counter()
     pattern = _symbolic(a, k, rule)
     t1 = time.perf_counter()
@@ -130,6 +175,7 @@ def ilu_sharded(
     fact.loc_vals.block_until_ready()
     fact.symbolic_seconds = t1 - t0
     fact.numeric_seconds = time.perf_counter() - t1
+    fact.ordering = ord_
     return fact
 
 
@@ -141,7 +187,16 @@ def ilu(
     band_rows: int = 32,
     mesh=None,
     broadcast: str = "psum",
+    ordering=None,
 ) -> ILUFactorization:
+    if backend == "topilu":
+        from .top_ilu import band_mesh
+
+        mesh = band_mesh(mesh)
+        n_dev = int(mesh.devices.size)
+    else:
+        n_dev = 1
+    a, ord_ = _resolve_ordering(a, ordering, n_dev, band_rows)
     t0 = time.perf_counter()
     pattern = _symbolic(a, k, rule)
     t1 = time.perf_counter()
@@ -164,5 +219,5 @@ def ilu(
     t2 = time.perf_counter()
     return ILUFactorization(
         a=a, k=k, pattern=pattern, vals=np.asarray(vals, dtype=np.float32),
-        symbolic_seconds=t1 - t0, numeric_seconds=t2 - t1,
+        symbolic_seconds=t1 - t0, numeric_seconds=t2 - t1, ordering=ord_,
     )

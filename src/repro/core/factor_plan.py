@@ -28,6 +28,11 @@ barriered multiply-then-subtract — exactly the oracle's arithmetic
 only reorders ops that share no data (different rows, finalized pivot
 rows), where no floating-point op can observe the difference, so the
 factor values equal the oracle's bitwise.
+
+Under a row reordering (``repro.core.ordering``) the plan is simply built
+for the permuted matrix — the contract, the schedule, and the caches are
+all relative to the matrix object handed in, so an ordered pipeline reuses
+this module unchanged (the permuted matrix carries its own plan cache).
 """
 from __future__ import annotations
 

@@ -601,9 +601,9 @@ def sweep_epoch_schedule(cols: np.ndarray, n_devices: int) -> SweepEpochSchedule
     if l_i.size:
         np.maximum.at(max_cross_src, l_i, lev_of[d_i, l_i, r_i, w_i])
     starts = [0] if nlev else []
-    for l in range(1, nlev):
-        if max_cross_src[l] >= starts[-1]:
-            starts.append(l)
+    for lvl in range(1, nlev):
+        if max_cross_src[lvl] >= starts[-1]:
+            starts.append(lvl)
     epoch_bounds = np.asarray(starts + [nlev], np.int64)
     epoch_of_level = np.zeros(max(nlev, 1), np.int64)
     for e in range(len(starts)):

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
@@ -181,6 +181,15 @@ def make_sharded_ell_matvec(a, mesh, axis: str = "band") -> Callable:
 
 def _identity(x):
     return x
+
+
+def _unpermute_results(res, ordering):
+    """Map solve output(s) back to original row order — ``x`` is the only
+    row-indexed field of a :class:`SolveResult` (pure gather, bitwise-
+    neutral). Handles a single result or a multi-RHS result list."""
+    for r in res if isinstance(res, list) else (res,):
+        r.x = ordering.unpermute_vector(r.x)
+    return res
 
 
 def _trim_history(hist: np.ndarray, it: int, bnorm: float) -> np.ndarray:
@@ -444,7 +453,7 @@ def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) ->
 
 def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
                   broadcast="psum", method="gmres", tol=1e-5, fact=None,
-                  bucket=True, **kw):
+                  bucket=True, ordering=None, **kw):
     """Distributed end-to-end solve: sharded TOP-ILU factorize + solve.
 
     The factorization stays device-resident (``ilu_sharded``), the
@@ -470,9 +479,52 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
     factorization config), like ``solve_with_ilu``'s caches; pass an
     already-built ``fact`` (a ``ShardedILUFactorization`` of the same
     matrix) to reuse it — and its cached precond — directly.
+
+    ``ordering=`` solves the symmetrically permuted system (``"rcm"``,
+    ``"fusion"`` — which targets this mesh's band ownership so sweep
+    epochs fuse — an ``Ordering``, or a permutation array): ``A`` permutes
+    once at plan time, ``b``/``x`` un/permute at this boundary (multi-RHS
+    included), and the returned ``fact`` carries the permutation — a
+    ``fact=`` round-trip without ``ordering=`` re-adopts it automatically.
     """
     from .api import ilu_sharded
     from .top_ilu import band_mesh
+
+    # --- ordering boundary: solve the permuted system, then gather back ---
+    # (a factorization built with an ordering carries it; adopting it here
+    # keeps `fact=` reuse consistent instead of silently mixing row orders)
+    caller_fact = fact is not None
+    if ordering is None and caller_fact:
+        ordering = getattr(fact, "ordering", None)
+    if ordering is not None:
+        from .ordering import make_ordering, permuted_system
+
+        n_dev = int((fact.mesh if fact is not None else band_mesh(mesh))
+                    .devices.size)
+        ord_ = make_ordering(a, ordering, n_devices=n_dev, band_rows=band_rows)
+        if ord_ is not None:
+            if caller_fact:
+                # a caller-supplied fact must have been factored under this
+                # exact permutation — anything else silently mixes row orders
+                # (matvec on one system, preconditioner on another)
+                fo = getattr(fact, "ordering", None)
+                if fo is None or not np.array_equal(fo.perm, ord_.perm):
+                    raise ValueError(
+                        "solve_sharded: `fact` was factored under a "
+                        f"different row ordering than ordering={ord_.name!r}"
+                        " — pass the fact's own ordering (or none, to adopt"
+                        " it), or refactor under the requested one")
+            ap = permuted_system(a, ord_)
+            # ordering="natural" stops the recursion from re-adopting the
+            # ordering carried by `fact` — `ap` is already permuted
+            res, fact = solve_sharded(
+                ap, ord_.permute_vector(np.asarray(b, np.float32)), k=k,
+                mesh=mesh, band_rows=band_rows, rule=rule, broadcast=broadcast,
+                method=method, tol=tol, fact=fact, bucket=bucket,
+                ordering="natural", **kw)
+            if not caller_fact and fact is not None and fact.ordering is None:
+                fact.ordering = ord_  # so `fact=` round-trips re-adopt it
+            return _unpermute_results(res, ord_), fact
 
     if fact is not None:
         if mesh is not None and not np.array_equal(
@@ -519,7 +571,8 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
 
 
 def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
-               broadcast="psum", method="gmres", tol=1e-5, sharded=True, **kw):
+               broadcast="psum", method="gmres", tol=1e-5, sharded=True,
+               ordering=None, **kw):
     """Serving warmup: pre-compile the whole factorize→precondition→solve
     stack for the given RHS batch-size buckets, so the first real request
     of a pre-warmed shape never pays the ~1–2 s first-dispatch XLA compile.
@@ -545,19 +598,28 @@ def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
         if sharded:
             _res, fact = solve_sharded(a, zb, k=k, band_rows=band_rows,
                                        rule=rule, broadcast=broadcast,
-                                       method=method, tol=tol, mesh=mesh, **kw)
+                                       method=method, tol=tol, mesh=mesh,
+                                       ordering=ordering, **kw)
             fact.precond(broadcast=broadcast).warm((tgt,))
         else:
             _res, fact = solve_with_ilu(a, zb, k=k, band_rows=band_rows,
-                                        method=method, tol=tol, **kw)
+                                        method=method, tol=tol,
+                                        ordering=ordering, **kw)
             fact.precond().warm((tgt,))
         out[nb] = time.perf_counter() - t0
     return out
 
 
 def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
-                   band_rows=32, use_pallas=True, **kw):
+                   band_rows=32, use_pallas=True, ordering=None, **kw):
     """End-to-end: factorize with ILU(k), then solve. Returns (SolveResult, fact).
+
+    ``ordering=`` solves the symmetrically permuted system instead
+    (``"rcm"``, ``"fusion"``, an ``Ordering``, or a permutation array):
+    ``A`` permutes once at plan time (cached on the matrix), ``b``/``x``
+    un/permute at this boundary — including multi-RHS batches — and the
+    returned ``fact`` describes the permuted system (its ``ordering``
+    field carries the permutation).
 
     The SpMV runs through the Pallas ELL kernel and the preconditioner
     through the factorization's cached ``PrecondApply`` (fused wavefront
@@ -573,6 +635,20 @@ def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
     this — build a fresh CSRMatrix instead.
     """
     from .api import ilu
+
+    if ordering is not None:
+        from .ordering import make_ordering, permuted_system
+
+        ord_ = make_ordering(a, ordering, n_devices=1, band_rows=band_rows)
+        if ord_ is not None:
+            ap = permuted_system(a, ord_)
+            res, fact = solve_with_ilu(
+                ap, ord_.permute_vector(np.asarray(b, np.float32)), k=k,
+                method=method, backend=backend, tol=tol, band_rows=band_rows,
+                use_pallas=use_pallas, **kw)
+            if fact is not None and fact.ordering is None:
+                fact.ordering = ord_
+            return _unpermute_results(res, ord_), fact
 
     cache = a.__dict__.setdefault("_solve_cache", {})
     mv_key = ("matvec", bool(use_pallas))

@@ -46,6 +46,12 @@ over all rows at once).
 
 On TPU this phase is the host-side *planning pass* (see DESIGN.md §3): its
 output (a static pattern) is what makes the numeric phase jit-able.
+
+Row order is an *input* to this phase: ILU(k) fill — and every schedule
+derived from it — depends on the order rows are given in. The ordering
+layer (``repro.core.ordering``, DESIGN.md §9) therefore sits strictly
+before Phase I: it permutes the matrix once, and everything here runs on
+the permuted system exactly as on any other matrix.
 """
 from __future__ import annotations
 

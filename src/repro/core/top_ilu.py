@@ -94,6 +94,12 @@ class ShardedILUFactorization:
     loc_vals: jax.Array  # (D, s_loc, W) f32, sharded over AXIS
     symbolic_seconds: float = 0.0
     numeric_seconds: float = 0.0
+    # the row ordering the system was permuted with before factoring
+    # (None = natural). ``a``/``pattern``/``loc_vals`` describe the
+    # *permuted* system; ``solve`` un/permutes at the boundary, while
+    # ``precond()`` stays in permuted row space (``solve_sharded`` owns
+    # the boundary on that path).
+    ordering: Optional[object] = None
     # structure-keyed shared cache (the engine-store entry): the sharded
     # triangular plan + compiled sweep live here, so refactorizations of
     # the same structure rebind values to one compiled solve engine
@@ -149,8 +155,15 @@ class ShardedILUFactorization:
         return self._preconds[broadcast]
 
     def solve(self, b: np.ndarray) -> np.ndarray:
-        """Apply the preconditioner: L y = b then U x = y, distributed."""
-        return np.asarray(self.precond()(np.asarray(b, np.float32)))
+        """Apply the preconditioner: L y = b then U x = y, distributed.
+        With an ordering, ``b`` permutes in and ``x`` un-permutes out."""
+        b = np.asarray(b, np.float32)
+        if self.ordering is not None:
+            b = self.ordering.permute_vector(b)
+        out = np.asarray(self.precond()(b))
+        if self.ordering is not None:
+            out = self.ordering.unpermute_vector(out)
+        return out
 
     def to_host(self):
         """Materialize as a host :class:`repro.core.api.ILUFactorization`."""
@@ -159,7 +172,7 @@ class ShardedILUFactorization:
         return ILUFactorization(
             a=self.a, k=self.k, pattern=self.pattern, vals=self.values_csr(),
             symbolic_seconds=self.symbolic_seconds,
-            numeric_seconds=self.numeric_seconds)
+            numeric_seconds=self.numeric_seconds, ordering=self.ordering)
 
 
 def _sharded_inputs(plan: NumericPlan, mesh: Mesh, keys=None):

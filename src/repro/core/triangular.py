@@ -458,6 +458,21 @@ class ShardedTriangularPlan:
         return (self.n_devices - 1) * 4 * nb * (
             self.nl_levels * self.maxr_l + self.nu_levels * self.maxr_u)
 
+    def comm_summary(self) -> dict:
+        """The modeled solve-side communication record — what the ordering
+        layer scores candidate permutations/ownerships with
+        (``repro.core.ordering.sweep_comm_model``) and what
+        ``tests/test_sharded_memory.py`` pins against compiled HLO."""
+        return {
+            "band_rows": int(self.band_rows),
+            "n_devices": int(self.n_devices),
+            "levels": int(self.nl_levels + self.nu_levels),
+            "epochs": int(self.l_sched.n_epochs + self.u_sched.n_epochs),
+            "collectives_per_apply": int(self.sweep_collectives_per_apply()),
+            "payload_slots_per_apply": int(self.sweep_payload_slots()),
+            "bytes_per_apply": int(self.sweep_bytes_per_apply()),
+        }
+
 
 def build_sharded_triangular_plan(pattern: ILUPattern, band_rows: int,
                                   n_devices: int) -> ShardedTriangularPlan:

@@ -1,0 +1,22 @@
+"""Kernel execution-mode resolution shared by every Pallas wrapper.
+
+``REPRO_PALLAS_FORCE_INTERPRET=1`` forces every ``pallas_call`` into
+interpret mode **even when a caller explicitly requested the compiled
+lowering** (``interpret=False``). That is what lets the CPU CI leg run the
+``pallas_compiled``-marked tests (see ``tests/conftest.py``): the tests'
+call paths, schedule plumbing, and bitwise assertions all execute — only
+the Mosaic lowering itself is substituted. It is a CI knob, not a perf
+knob; on TPU hardware leave it unset and use ``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import os
+
+
+def force_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_FORCE_INTERPRET", "0") == "1"
+
+
+def resolve_interpret(interpret: bool) -> bool:
+    """The mode a kernel actually runs in (reads the env at trace time)."""
+    return True if force_interpret() else bool(interpret)

@@ -12,7 +12,6 @@ from __future__ import annotations
 import os
 
 import jax.numpy as jnp
-import numpy as np
 
 from . import panel_update as _pu
 from . import spmv_ell as _sp

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _kernel(a_ref, b_ref, c_ref, o_ref):
     k = pl.program_id(2)
@@ -74,7 +76,7 @@ def panel_update(c, a, b, *, bm=256, bn=256, bk=128, interpret=True):
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, b, c)
 
 
@@ -111,5 +113,5 @@ def factor_wavefront(op_row, op_lane, op_piv, op_dlane, op_dst, dst_flat,
                   for a in args],
         out_specs=pl.BlockSpec((n, w), lambda *_: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, w), a_vals_ext.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*args)

@@ -17,6 +17,8 @@ from jax.experimental import pallas as pl
 from repro.core.bitmath import masked_lane_sum
 from repro.core.planner import COL_SENTINEL
 
+from .config import resolve_interpret
+
 
 def _kernel(cols_ref, vals_ref, x_ref, o_ref):
     cols = cols_ref[...]
@@ -45,5 +47,5 @@ def spmv_ell(cols, vals, x, *, bm=512, interpret=True):
         ],
         out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), vals.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(cols, vals, x)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _right_upper_kernel(a_ref, u_ref, o_ref):
     bs = u_ref.shape[0]
@@ -69,7 +71,7 @@ def trsm_right_upper(a, u, *, bm=256, interpret=True):
         ],
         out_specs=pl.BlockSpec((bm, bs), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, bs), a.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, u)
 
 
@@ -89,5 +91,5 @@ def trsm_left_unit_lower(l, a, *, bn=256, interpret=True):
         ],
         out_specs=pl.BlockSpec((bs, bn), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((bs, n), a.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(l, a)

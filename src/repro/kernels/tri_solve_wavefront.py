@@ -28,6 +28,8 @@ import functools
 import jax
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _kernel(l_cols_ref, l_vals_ref, l_rhs_idx_ref, u_cols_ref, u_vals_ref,
             u_diag_ref, u_rhs_idx_ref, out_perm_ref, b_ref, o_ref):
@@ -59,5 +61,5 @@ def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
                   for a in args],
         out_specs=pl.BlockSpec((n,), lambda *_: (0,)),
         out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*args)

@@ -28,6 +28,8 @@ import functools
 import jax
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _kernel(*refs, start, limit, has_diag):
     from repro.core.triangular import epoch_sweep_jnp
@@ -60,5 +62,5 @@ def epoch_sweep(x, cols, vals, rhs, diag=None, *, start, limit, interpret=True):
                   for a in args],
         out_specs=pl.BlockSpec(x.shape, lambda *_: (0,)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*args)

@@ -25,7 +25,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 
 def _lower_and_compile(cfg, shape_name, mesh, opts, microbatches):

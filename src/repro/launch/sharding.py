@@ -17,14 +17,13 @@ evenly falls back to replication rather than failing to lower.
 """
 from __future__ import annotations
 
-import re
 from typing import Any
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .mesh import dp_size, mesh_axis_sizes, tp_size
+from .mesh import mesh_axis_sizes, tp_size
 
 
 def _path_str(path) -> str:

@@ -7,7 +7,7 @@ and consumed by ``apply``-style functions.
 from __future__ import annotations
 
 import math
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,7 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ recurrence only — the classic sequence-dim gradient checkpoint.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 

@@ -12,7 +12,6 @@ stack with interleaved cross-attention.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,11 +23,10 @@ from .attention import (
     init_mla,
     mla_attention,
     mla_decode,
-    chunked_attention,
 )
-from .common import KeyGen, dense_init, layer_norm, maybe_shard, rms_norm
+from .common import KeyGen, layer_norm, rms_norm
 from .ffn import init_mlp, init_moe, mlp, moe_ffn
-from .ssm import init_ssm, init_ssm_state, ssm_forward
+from .ssm import init_ssm, ssm_forward
 
 
 # --------------------------------------------------------------------------

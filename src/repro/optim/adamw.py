@@ -7,7 +7,6 @@ by ``ShardingRules.opt_shardings`` — the math here is layout-agnostic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +36,9 @@ def schedule(c: AdamWConfig, step):
 
 
 def init(params):
-    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def f32(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
     return {
         "mu": jax.tree.map(f32, params),
         "nu": jax.tree.map(f32, params),

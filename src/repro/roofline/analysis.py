@@ -24,7 +24,6 @@ Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, Optional
 

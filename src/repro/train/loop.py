@@ -11,7 +11,6 @@ import time
 from typing import Optional
 
 import jax
-import numpy as np
 
 from ..checkpoint.ckpt import AsyncCheckpointer, latest_step, restore
 from ..data.pipeline import SyntheticLM

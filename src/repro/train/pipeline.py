@@ -21,7 +21,6 @@ batches/params on the other axes as usual.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

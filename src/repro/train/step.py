@@ -15,8 +15,6 @@ inserted) data-parallel all-reduce.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

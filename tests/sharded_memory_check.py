@@ -27,7 +27,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main():
     n, band_rows = int(sys.argv[1]), int(sys.argv[2])
-    import numpy as np
     import jax
 
     from repro.core import pilu1_symbolic, poisson_2d

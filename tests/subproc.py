@@ -7,36 +7,65 @@ in seconds, reliably. So: redirect the child to temp files (read them back
 afterwards) and retry once on a stall before failing. Keeps the tests
 meaningful (a deterministic failure still fails twice) without letting a
 scheduler hiccup burn a whole CI run.
+
+Two isolation rules keep a failed attempt from poisoning the retry:
+
+* every attempt gets **fresh** output files, rotated before the child
+  starts — a child killed mid-write can never leave bytes in the next
+  attempt's capture;
+* the child runs in its own **process group** and the whole group is
+  signalled on timeout, so grandchildren (benchmark drivers that spawn
+  their own JAX subprocesses) cannot outlive the attempt and keep the CPU
+  or the captured files busy into the retry.
 """
+import os
 import signal
 import subprocess
 import tempfile
 import time
 
 
+def _signal_group(proc, sig):
+    """Deliver ``sig`` to the child's process group (fall back to the
+    child alone if the group is already gone)."""
+    try:
+        os.killpg(proc.pid, sig)
+    except (ProcessLookupError, PermissionError):
+        try:
+            proc.send_signal(sig)
+        except ProcessLookupError:
+            pass
+
+
 def run_checked(cmd, env, timeout, tries=2):
     """Run ``cmd``; returns (returncode, stdout, stderr) of the last try.
 
     A try that exceeds ``timeout`` gets SIGABRT (so ``faulthandler`` dumps
-    every thread's Python stack into the captured stderr), then SIGKILL,
-    then one retry; only a timeout triggers a retry — a nonzero exit
-    returns immediately so assertion failures surface with their output.
+    every thread's Python stack into the captured stderr), then SIGKILL —
+    both delivered to the whole process group — then one retry with fresh
+    output files; only a timeout triggers a retry — a nonzero exit returns
+    immediately so assertion failures surface with their output.
     """
     env = dict(env)
     env.setdefault("PYTHONFAULTHANDLER", "1")
     last = None
     for attempt in range(tries):
+        # fresh, rotated capture files per attempt: nothing a killed child
+        # (or a straggling grandchild) wrote can leak into this attempt
         with tempfile.TemporaryFile() as out_f, tempfile.TemporaryFile() as err_f:
-            proc = subprocess.Popen(cmd, env=env, stdout=out_f, stderr=err_f)
+            proc = subprocess.Popen(cmd, env=env, stdout=out_f, stderr=err_f,
+                                    start_new_session=True)
             try:
                 rc = proc.wait(timeout=timeout)
             except subprocess.TimeoutExpired:
+                _signal_group(proc, signal.SIGABRT)
                 try:
-                    proc.send_signal(signal.SIGABRT)
                     proc.wait(timeout=15)
                 except subprocess.TimeoutExpired:
+                    _signal_group(proc, signal.SIGKILL)
                     proc.kill()
                     proc.wait()
+                _signal_group(proc, signal.SIGKILL)  # reap any grandchildren
                 time.sleep(0.2)  # let the final stderr writes land
                 out_f.seek(0)
                 err_f.seek(0)

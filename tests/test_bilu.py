@@ -59,7 +59,6 @@ def test_bilu_supersets_scalar_ilu():
 def test_bilu_preconditions_cg():
     """BILU-preconditioned CG beats unpreconditioned CG on Poisson."""
     import jax.numpy as jnp
-    import scipy.sparse.linalg as spla
 
     from repro.core.solvers import cg, csr_to_ell_arrays, make_ell_matvec
 

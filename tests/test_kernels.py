@@ -1,4 +1,6 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import importlib
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -175,7 +177,7 @@ def test_factor_wavefront_kernel_bitwise_vs_oracle(seed, k):
 # --------------------------------------------------------------------------
 @pytest.mark.pallas_compiled
 def test_compiled_panel_update_matches_interpret():
-    from repro.kernels import panel_update as pu
+    pu = importlib.import_module("repro.kernels.panel_update")
 
     a = jnp.asarray(RNG.standard_normal((128, 128)), jnp.float32)
     b = jnp.asarray(RNG.standard_normal((128, 128)), jnp.float32)
@@ -187,7 +189,7 @@ def test_compiled_panel_update_matches_interpret():
 
 @pytest.mark.pallas_compiled
 def test_compiled_spmv_ell_bitwise():
-    from repro.kernels import spmv_ell as sp
+    sp = importlib.import_module("repro.kernels.spmv_ell")
 
     cols, vals = _rand_ell(256, 8, np.random.default_rng(7))
     x = np.random.default_rng(8).standard_normal(256).astype(np.float32)
@@ -201,7 +203,7 @@ def test_compiled_spmv_ell_bitwise():
 def test_compiled_factor_wavefront_bitwise():
     from repro.core import matgen, numeric_ilu_ref, symbolic_ilu_k
     from repro.core.factor_plan import build_factor_plan
-    from repro.kernels import panel_update as pu
+    pu = importlib.import_module("repro.kernels.panel_update")
 
     a = matgen(96, density=0.06, seed=11)
     pat = symbolic_ilu_k(a, 1)
@@ -260,7 +262,7 @@ def test_epoch_sweep_kernel_bitwise(with_diag):
     """The epoch-fused sweep kernel == the shared jnp implementation, bit
     for bit, for both the L (unit-diagonal) and U (divide) variants."""
     from repro.core.triangular import epoch_sweep_jnp
-    from repro.kernels import tri_sweep_epoch as te
+    te = importlib.import_module("repro.kernels.tri_sweep_epoch")
 
     x0, cols, vals, rhs, diag, scratch = _epoch_args()
     d = diag if with_diag else None
@@ -277,7 +279,7 @@ def test_epoch_sweep_kernel_bitwise(with_diag):
 @pytest.mark.parametrize("with_diag", [False, True])
 def test_compiled_epoch_sweep_bitwise(with_diag):
     from repro.core.triangular import epoch_sweep_jnp
-    from repro.kernels import tri_sweep_epoch as te
+    te = importlib.import_module("repro.kernels.tri_sweep_epoch")
 
     x0, cols, vals, rhs, diag, scratch = _epoch_args(k=2, seed=9)
     d = diag if with_diag else None

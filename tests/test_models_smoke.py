@@ -1,6 +1,5 @@
 """Per-architecture smoke tests: reduced config, one forward + one train
 step + one decode step on CPU, asserting shapes and finiteness."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore, save
 from repro.data.pipeline import Prefetcher, SyntheticLM

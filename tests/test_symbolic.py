@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    CSRMatrix,
     matgen,
     pilu1_symbolic,
     poisson_2d,

@@ -3,7 +3,6 @@ resumes mid-run; the solver pipeline works through the public API."""
 import dataclasses
 
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.optim import adamw
