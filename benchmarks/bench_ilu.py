@@ -11,7 +11,13 @@ import time
 
 import numpy as np
 
-from repro.core import matgen, convection_diffusion_2d, numeric_ilu_ref, pilu1_symbolic, symbolic_ilu_k
+from repro.core import (
+    matgen,
+    convection_diffusion_2d,
+    numeric_ilu_ref,
+    pilu1_symbolic,
+    symbolic_ilu_k,
+)
 from repro.core.api import ilu
 from repro.core.perf_model import (
     GIG_E, INFINIBAND, ClusterSpec, WorkloadStats, predict_times, speedup_curve,
@@ -63,8 +69,7 @@ def fig6_symbolic_vs_numeric(quick=True):
 
 def tables23_pilu1(quick=True):
     """Tables II/III: sequential vs PILU(1), k=1, paper-style densities."""
-    cases = ([(2000, 0.01)] if quick
-             else [(4000, 0.003), (8000, 0.001), (16000, 0.0006)])
+    cases = ([(2000, 0.01)] if quick else [(4000, 0.003), (8000, 0.001), (16000, 0.0006)])
     rows = []
     for n, dens in cases:
         a = matgen(n, density=dens, seed=2)
@@ -73,8 +78,7 @@ def tables23_pilu1(quick=True):
                           n_bands=max(n // 8, 1), k=1)
         for cpus in (30, 40, 50, 60):
             pred = predict_times(w, cpus, ClusterSpec(bandwidth=GIG_E))
-            rows.append((n, cpus, pat.nnz, round(ts, 3), round(tn, 3),
-                         round(pred["speedup"], 1)))
+            rows.append((n, cpus, pat.nnz, round(ts, 3), round(tn, 3), round(pred["speedup"], 1)))
     return ("n,cpus,final_entries,t_sym,t_num,predicted_speedup", rows)
 
 
@@ -83,8 +87,7 @@ def fig8_infiniband(quick=True):
     n = 2000 if quick else 16000
     a = matgen(n, density=0.01 if quick else 0.0006, seed=3)
     pat, ts, tn = _measure(a, 1)
-    w = WorkloadStats(n=n, n_f=pat.nnz, t_symbolic=ts, t_numeric=tn,
-                      n_bands=max(n // 8, 1), k=1)
+    w = WorkloadStats(n=n, n_f=pat.nnz, t_symbolic=ts, t_numeric=tn, n_bands=max(n // 8, 1), k=1)
     ps = (20, 40, 60, 80, 100)
     ge = speedup_curve(w, ps, ClusterSpec(bandwidth=GIG_E))
     ib = speedup_curve(w, ps, ClusterSpec(bandwidth=INFINIBAND))
@@ -100,8 +103,7 @@ def fig9_grid_latency(quick=True):
     n = 2000 if quick else 8000
     a = matgen(n, density=0.0046 if not quick else 0.01, seed=4)
     pat, ts, tn = _measure(a, 1)
-    w = WorkloadStats(n=n, n_f=pat.nnz, t_symbolic=ts, t_numeric=tn,
-                      n_bands=max(n // 16, 1), k=1)
+    w = WorkloadStats(n=n, n_f=pat.nnz, t_symbolic=ts, t_numeric=tn, n_bands=max(n // 16, 1), k=1)
     rows = []
     for n_clusters, lat_ms in ((1, 0.0), (2, 17.0), (2, 24.0), (3, 17.0)):
         p = 100 if n_clusters == 1 else n_clusters * 50

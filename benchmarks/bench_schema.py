@@ -95,6 +95,41 @@ _TOPILU_CASE = {
     }],
 }
 
+_INVERSE_CASE = {
+    "devices": int,
+    "n": int,
+    "grid": int,
+    "k": int,
+    "band_rows": int,
+    "batch": int,
+    "bitwise_equal_single_device": bool,
+    "iterations_inverse": int,
+    "iterations_sweep": int,
+    "inverse_nnz": int,
+    "factor_nnz": int,
+    "value_depth": int,
+    # both sides of the "auto" policy's modeled communication
+    "sweep_collectives_per_apply": int,
+    "sweep_bytes_per_apply": int,
+    "inverse_collectives_per_apply": int,
+    "inverse_bytes_per_apply": int,
+    "modeled_cost_sweep": int,
+    "modeled_cost_inverse": int,
+    "auto_method": str,
+    "warm_seconds": NUM,
+    "inverse_apply_steady_seconds": NUM,
+    "inverse_apply_batched_seconds_per_rhs": NUM,
+    "sweep_ordering": str,
+    "sweep_apply_steady_seconds": NUM,
+    "gmres_steady_seconds": NUM,
+    "random": {
+        "n": int,
+        "converged": bool,
+        "iterations": int,
+        "bitwise_equal_single_device": bool,
+    },
+}
+
 _FACTOR_CASE = {
     "n": int,
     "nnz": int,
@@ -121,6 +156,11 @@ SCHEMAS = {
         "bench": str,
         "quick": bool,
         "metrics": {"grid": int, "cases": [_TOPILU_CASE]},
+    },
+    "BENCH_inverse.json": {
+        "bench": str,
+        "quick": bool,
+        "metrics": {"grid": int, "cases": [_INVERSE_CASE]},
     },
     "BENCH_factor.json": {
         "bench": str,
@@ -164,8 +204,7 @@ def _check(value, schema, path, errors):
             ok = isinstance(value, schema)
         if not ok:
             want = getattr(schema, "__name__", schema)
-            errors.append(
-                f"{path}: expected {want}, got {type(value).__name__} ({value!r})")
+            errors.append(f"{path}: expected {want}, got {type(value).__name__} ({value!r})")
 
 
 def validate_payload(payload, name: str) -> list:

@@ -120,8 +120,7 @@ def measure(grid: int, band_rows: int = 16, batch: int = 8) -> dict:
     t0 = time.perf_counter()
     solve_reps = 3
     for _ in range(solve_reps):
-        r2, _ = solve_sharded(a, b, k=1, band_rows=band_rows, tol=1e-6,
-                              fact=fact)
+        r2, _ = solve_sharded(a, b, k=1, band_rows=band_rows, tol=1e-6, fact=fact)
     gmres_steady = (time.perf_counter() - t0) / solve_reps
 
     t0 = time.perf_counter()
@@ -141,8 +140,7 @@ def measure(grid: int, band_rows: int = 16, batch: int = 8) -> dict:
             o_apply, o_b, r_o = fact.precond(), b, res
         else:
             ordering = make_ordering(a, name, n_devices=d, band_rows=band_rows)
-            r_o, o_fact = solve_sharded(a, b, k=1, band_rows=band_rows,
-                                        tol=1e-6, ordering=ordering)
+            r_o, o_fact = solve_sharded(a, b, k=1, band_rows=band_rows, tol=1e-6, ordering=ordering)
             o_apply = o_fact.precond()
             o_b = ordering.permute_vector(b)
         # ordered distributed solve == single-device solve of the same

@@ -86,8 +86,7 @@ def main():
             coll_s = coll_bytes / LINK_BW
             comp_s = flops / D / PEAK_FLOPS
             t0 = time.perf_counter()
-            got = topilu_numeric(a, pat, band_rows=band_rows, mesh=mesh,
-                                 broadcast=broadcast)
+            got = topilu_numeric(a, pat, band_rows=band_rows, mesh=mesh, broadcast=broadcast)
             wall = (time.perf_counter() - t0) * 1e3
             ok = bool(np.array_equal(got.view(np.int32), want.view(np.int32)))
             name = f"R={band_rows},bcast={broadcast}"

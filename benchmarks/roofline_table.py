@@ -32,14 +32,18 @@ def fmt(v, nd=3):
 
 def roofline_table(cells, pod="pod1", tag="baseline"):
     lines = [
-        "| arch | shape | kind | compute s | memory s | collective s | bottleneck | MODEL_FLOPs | useful | fits 16G |",
+        "| arch | shape | kind | compute s | memory s | collective s | bottleneck"
+        " | MODEL_FLOPs | useful | fits 16G |",
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
     for (arch, shape, p, t), d in sorted(cells.items()):
         if p != pod or t != tag:
             continue
         if d.get("status") == "skipped":
-            lines.append(f"| {arch} | {shape} | — | — | — | — | skipped: sub-quadratic-only shape | — | — | — |")
+            lines.append(
+                f"| {arch} | {shape} | — | — | — | — | skipped: sub-quadratic-only shape"
+                " | — | — | — |"
+            )
             continue
         if d.get("status") != "ok":
             lines.append(f"| {arch} | {shape} | — | ERROR | | | | | | |")

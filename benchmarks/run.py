@@ -80,8 +80,7 @@ def bench_paper_tables(rows, quick=True):
 
     t0 = time.perf_counter()
     hdr, data = B.fig6_symbolic_vs_numeric(quick)
-    rows.append(("paper.fig6_sym_vs_num", (time.perf_counter() - t0) * 1e6,
-                 f"ratios={data[0][1]}"))
+    rows.append(("paper.fig6_sym_vs_num", (time.perf_counter() - t0) * 1e6, f"ratios={data[0][1]}"))
 
     t0 = time.perf_counter()
     hdr, data = B.tables23_pilu1(quick)
@@ -225,6 +224,48 @@ def bench_sweep(rows, devices=(1, 2, 8)):
     return {"cases": cases, "grid": grid}
 
 
+def bench_inverse(rows, devices=(1, 2, 8)):
+    """Incomplete-inverse SpMV-chain trajectory (PR-6 tentpole).
+
+    One subprocess per simulated device count; aggregates the
+    sweep-vs-inverse apply latencies, the modeled communication both sides
+    of the ``"auto"`` policy, and the bitwise anchors from
+    ``benchmarks/bench_inverse.py``. Selected by an ``--emit-json``
+    basename containing ``inverse``.
+    """
+    import subprocess
+
+    grid = 32  # n=1024 — same problem as the BENCH_sweep trajectory
+    child = os.path.join(os.path.dirname(__file__), "bench_inverse.py")
+    cases = []
+    for d in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        env["_BENCH_INVERSE_CHILD"] = "1"
+        out = subprocess.run(
+            [sys.executable, child, str(grid)], env=env, capture_output=True,
+            text=True, timeout=1800,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(f"bench_inverse D={d} failed:\n{out.stderr[-2000:]}")
+        m = json.loads(out.stdout)
+        cases.append(m)
+        rows.append((f"inverse.apply_d{d}",
+                     m["inverse_apply_steady_seconds"] * 1e6,
+                     f"sweep_{m['sweep_ordering']}="
+                     f"{m['sweep_apply_steady_seconds'] * 1e6:.0f}us "
+                     f"coll/apply={m['inverse_collectives_per_apply']} "
+                     f"(sweep={m['sweep_collectives_per_apply']}) "
+                     f"bitwise={m['bitwise_equal_single_device']}"))
+        rows.append((f"inverse.gmres_d{d}", m["gmres_steady_seconds"] * 1e6,
+                     f"iters={m['iterations_inverse']} "
+                     f"(sweep={m['iterations_sweep']}) "
+                     f"auto={m['auto_method']} "
+                     f"random_converged={m['random']['converged']}"))
+    return {"cases": cases, "grid": grid}
+
+
 def bench_solver(rows, quick=True):
     """Device-resident preconditioned Krylov engine (PR-1 tentpole)."""
     from benchmarks import bench_ilu as B
@@ -285,16 +326,16 @@ def main() -> None:
     rows = []
     topilu_metrics = None
     base = os.path.basename(emit_json) if emit_json else ""
-    if "topilu" in base or "sweep" in base:
+    if "topilu" in base or "sweep" in base or "inverse" in base:
         # distributed trajectories only: spawning 3 jax subprocesses is too
         # slow to fold into every CSV run
-        if "sweep" in base:
-            payload = {"bench": "sweep_epoch_fused", "quick": quick,
-                       "metrics": bench_sweep(rows)}
+        if "inverse" in base:
+            payload = {"bench": "inverse_chain", "quick": quick, "metrics": bench_inverse(rows)}
+        elif "sweep" in base:
+            payload = {"bench": "sweep_epoch_fused", "quick": quick, "metrics": bench_sweep(rows)}
         else:
             topilu_metrics = bench_topilu(rows)
-            payload = {"bench": "topilu_sharded", "quick": quick,
-                       "metrics": topilu_metrics}
+            payload = {"bench": "topilu_sharded", "quick": quick, "metrics": topilu_metrics}
         print("name,us_per_call,derived")
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

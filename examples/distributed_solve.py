@@ -88,8 +88,7 @@ def main():
     res_1, _ = solve_with_ilu(a, b, k=1, tol=1e-6, use_pallas=False)
     print(f"\ndistributed GMRES : {res_d.iterations:3d} iters, "
           f"residual {res_d.residual:.2e}, converged={res_d.converged}")
-    print(f"single-device     : {res_1.iterations:3d} iters, "
-          f"residual {res_1.residual:.2e}")
+    print(f"single-device     : {res_1.iterations:3d} iters, " f"residual {res_1.residual:.2e}")
     assert res_d.converged
     assert np.array_equal(res_d.x.view(np.int32), res_1.x.view(np.int32))
     print("solution vector: BITWISE EQUAL to the single-device solve ✓")

@@ -23,8 +23,7 @@ def main():
 
     print(f"\n-- ILU({k}) factorization (symbolic=PILU(1) fast path for k=1) --")
     fact = ilu(a, k, backend="jax")
-    print(f"entries: {a.nnz} -> {fact.nnz} "
-          f"(fill ratio {fact.nnz / a.nnz:.2f})")
+    print(f"entries: {a.nnz} -> {fact.nnz} " f"(fill ratio {fact.nnz / a.nnz:.2f})")
     print(f"symbolic {fact.symbolic_seconds*1e3:.1f} ms, "
           f"numeric {fact.numeric_seconds*1e3:.1f} ms")
 

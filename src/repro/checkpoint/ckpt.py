@@ -39,15 +39,12 @@ def _tree_paths(tree):
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
     for path, leaf in leaves:
-        key = "/".join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
-        )
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         out.append((key, leaf))
     return out
 
 
-def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
-         keep: int = 3) -> str:
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None, keep: int = 3) -> str:
     """Synchronous atomic save. Returns the final directory path."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -105,8 +102,7 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: Optional[int], like: Any,
-            shardings: Any = None) -> tuple:
+def restore(ckpt_dir: str, step: Optional[int], like: Any, shardings: Any = None) -> tuple:
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs). ``shardings`` (optional pytree of NamedSharding)
     re-lays every leaf onto the current mesh — the elastic path."""
@@ -126,7 +122,9 @@ def restore(ckpt_dir: str, step: Optional[int], like: Any,
     tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), leaves)
     if shardings is not None:
         tree = jax.tree.map(
-            lambda a, s, l: jax.device_put(a.astype(np.asarray(l).dtype if hasattr(l, "dtype") else a.dtype), s),
+            lambda a, s, l: jax.device_put(
+                a.astype(np.asarray(l).dtype if hasattr(l, "dtype") else a.dtype), s
+            ),
             tree, shardings, like,
         )
     return tree, manifest

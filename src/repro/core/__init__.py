@@ -13,3 +13,16 @@ from .ordering import (  # noqa: F401
     permute_csr,
     rcm_ordering,
 )
+from .inverse_ref import (  # noqa: F401
+    inverse_apply_ref,
+    inverse_pattern_ref,
+    inverse_values_ref,
+)
+from .inverse import (  # noqa: F401
+    InversePrecondApply,
+    ShardedInversePrecondApply,
+    build_inverse_plan,
+    inverse_comm_model,
+    modeled_apply_cost,
+    resolve_precond_method,
+)

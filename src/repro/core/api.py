@@ -84,21 +84,38 @@ class ILUFactorization:
     # the row ordering the system was permuted with (None = natural);
     # solve() permutes b / unpermutes x so callers stay in original space
     ordering: Optional["Ordering"] = None
-    # lazily built PrecondApply instances, keyed by use_pallas — the
-    # triangular plan + compiled sweep are built once and reused across
-    # every solve/restart/RHS batch against this factorization
+    # how M^{-1} applies: "sweep" (the exact triangular sweeps), "inverse"
+    # (the level-truncated incomplete-inverse SpMV chain, DESIGN.md §Inverse),
+    # or "auto" (cost-modeled; single-device resolves to sweep)
+    precond_method: str = "sweep"
+    # lazily built apply engines, keyed by (method, use_pallas) — the plan
+    # + compiled apply are built once and reused across every
+    # solve/restart/RHS batch against this factorization
     _preconds: dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
 
     def lu_matrices(self):
         return split_lu(self.pattern, self.vals)
 
-    def precond(self, use_pallas: bool = True):
-        """The cached device-resident M^{-1} apply (``PrecondApply``)."""
-        key = bool(use_pallas)
-        if key not in self._preconds:
-            from .triangular import PrecondApply
+    def precond(self, use_pallas: bool = True, method: Optional[str] = None):
+        """The cached device-resident M^{-1} apply: ``PrecondApply`` for the
+        sweep method, ``InversePrecondApply`` for the inverse chain.
+        ``method`` defaults to the factorization's ``precond_method``."""
+        from .inverse import resolve_precond_method
 
-            self._preconds[key] = PrecondApply(self.pattern, self.vals, use_pallas=key)
+        method = resolve_precond_method(
+            method if method is not None else self.precond_method,
+            self.pattern, n_devices=1)
+        key = (method, bool(use_pallas))
+        if key not in self._preconds:
+            if method == "inverse":
+                from .inverse import InversePrecondApply
+
+                self._preconds[key] = InversePrecondApply(
+                    self.pattern, self.vals, use_pallas=key[1])
+            else:
+                from .triangular import PrecondApply
+
+                self._preconds[key] = PrecondApply(self.pattern, self.vals, use_pallas=key[1])
         return self._preconds[key]
 
     def solve(self, b: np.ndarray) -> np.ndarray:
@@ -152,6 +169,7 @@ def ilu_sharded(
     mesh=None,
     broadcast: str = "psum",
     ordering=None,
+    precond_method: str = "sweep",
 ):
     """Distributed factorization whose output **stays sharded on the mesh**
     (``repro.core.top_ilu.ShardedILUFactorization``): each device holds only
@@ -170,12 +188,12 @@ def ilu_sharded(
     t0 = time.perf_counter()
     pattern = _symbolic(a, k, rule)
     t1 = time.perf_counter()
-    fact = topilu_factor_sharded(a, pattern, band_rows=band_rows, mesh=mesh,
-                                 broadcast=broadcast)
+    fact = topilu_factor_sharded(a, pattern, band_rows=band_rows, mesh=mesh, broadcast=broadcast)
     fact.loc_vals.block_until_ready()
     fact.symbolic_seconds = t1 - t0
     fact.numeric_seconds = time.perf_counter() - t1
     fact.ordering = ord_
+    fact.precond_method = precond_method
     return fact
 
 
@@ -188,6 +206,7 @@ def ilu(
     mesh=None,
     broadcast: str = "psum",
     ordering=None,
+    precond_method: str = "sweep",
 ) -> ILUFactorization:
     if backend == "topilu":
         from .top_ilu import band_mesh
@@ -220,4 +239,5 @@ def ilu(
     return ILUFactorization(
         a=a, k=k, pattern=pattern, vals=np.asarray(vals, dtype=np.float32),
         symbolic_seconds=t1 - t0, numeric_seconds=t2 - t1, ordering=ord_,
+        precond_method=precond_method,
     )

@@ -71,7 +71,9 @@ def tile_adjacency(a: CSRMatrix, bs: int) -> CSRMatrix:
 
     rows = np.repeat(np.arange(a.n), np.diff(a.indptr)) // bs
     cols = a.indices // bs
-    m = sp.csr_matrix((np.ones(len(cols), np.float32), (rows, cols.astype(np.int64))), shape=(nt, nt))
+    m = sp.csr_matrix(
+        (np.ones(len(cols), np.float32), (rows, cols.astype(np.int64))), shape=(nt, nt)
+    )
     m = m + sp.eye(nt, format="csr", dtype=np.float32)  # diagonal tiles always present
     m.sum_duplicates()
     m.data[:] = 1.0

@@ -102,7 +102,9 @@ def _lane_chunk(acc, cols, vals, gathered, limit):
     return acc
 
 
-def masked_lane_sum(cols: jnp.ndarray, vals: jnp.ndarray, gathered: jnp.ndarray, limit) -> jnp.ndarray:
+def masked_lane_sum(
+    cols: jnp.ndarray, vals: jnp.ndarray, gathered: jnp.ndarray, limit
+) -> jnp.ndarray:
     """Sum ``vals * gathered`` over the trailing lane axis where ``cols < limit``.
 
     ``cols``/``vals``/``gathered`` share shape ``(..., W)``; returns ``(...,)``.

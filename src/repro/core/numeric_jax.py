@@ -84,9 +84,7 @@ def factor_wavefront_sweeps_jnp(op_row, op_lane, op_piv, op_dlane, op_dst,
         x = x.at[idx, lanes].set(jnp.where(valid, l, xp))
         return vals.at[rows].set(x), None
 
-    vals, _ = lax.scan(
-        round_step, a_vals_ext, (op_row, op_lane, op_piv, op_dlane, op_dst)
-    )
+    vals, _ = lax.scan(round_step, a_vals_ext, (op_row, op_lane, op_piv, op_dlane, op_dst))
     return vals[:n]
 
 
@@ -263,8 +261,7 @@ def make_superstep_factorizer(
 
 def _device_major(plan: NumericPlan, x):
     """(n_pad, ...) row table -> (D, s_loc, ...) device blocks."""
-    return plan.rows_device_major(x).reshape(
-        (plan.n_devices, plan.s_loc) + x.shape[1:])
+    return plan.rows_device_major(x).reshape((plan.n_devices, plan.s_loc) + x.shape[1:])
 
 
 def plan_state_array(plan: NumericPlan, a=None):

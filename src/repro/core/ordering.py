@@ -292,8 +292,7 @@ def fusion_aware_ordering(
         perm[pos_d] = seq[off:off + take]
         off += take
     assert off == n
-    return Ordering(name="fusion", perm=perm,
-                    iperm=inverse_permutation(perm), band_rows=band_rows)
+    return Ordering(name="fusion", perm=perm, iperm=inverse_permutation(perm), band_rows=band_rows)
 
 
 # --------------------------------------------------------------------------
@@ -309,8 +308,7 @@ def sweep_comm_model(pattern, band_rows: int, n_devices: int) -> dict:
     """
     from .triangular import build_sharded_triangular_plan
 
-    return build_sharded_triangular_plan(
-        pattern, band_rows, n_devices).comm_summary()
+    return build_sharded_triangular_plan(pattern, band_rows, n_devices).comm_summary()
 
 
 def factor_comm_model(a: CSRMatrix, pattern, band_rows: int, n_devices: int) -> dict:
@@ -403,8 +401,7 @@ def make_ordering(
         return None if spec.is_natural else spec
     if not isinstance(spec, str):
         perm = _check_permutation(spec, a.n)
-        ordering = Ordering(name="custom", perm=perm,
-                            iperm=inverse_permutation(perm))
+        ordering = Ordering(name="custom", perm=perm, iperm=inverse_permutation(perm))
         return None if ordering.is_natural else ordering
     if spec not in ORDERING_NAMES:
         raise ValueError(

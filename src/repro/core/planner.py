@@ -656,8 +656,7 @@ def sweep_epoch_schedule(cols: np.ndarray, n_devices: int) -> SweepEpochSchedule
         flat = slots_e.reshape(-1)
         for d in range(D):
             hr = halo_slots[d][: h_cnt[d]]
-            ing[d] = halo_positions(hr, flat, n_loc, scratch).reshape(
-                D, E).astype(np.int32)
+            ing[d] = halo_positions(hr, flat, n_loc, scratch).reshape(D, E).astype(np.int32)
         egress.append(eg)
         ingress.append(ing)
         egress_slots.append(slots_e)

@@ -353,8 +353,7 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
                          .at[i + 1].set(jnp.where(on, hi1, h[i + 1])))
 
             h = jax.lax.fori_loop(0, m, rot, h)
-            dsafe = jnp.maximum(
-                jnp.sqrt(barred(h[j] * h[j]) + barred(h[j + 1] * h[j + 1])), 1e-30)
+            dsafe = jnp.maximum(jnp.sqrt(barred(h[j] * h[j]) + barred(h[j + 1] * h[j + 1])), 1e-30)
             c, s = h[j] / dsafe, h[j + 1] / dsafe
             hcol = h.at[j].set(barred(c * h[j]) + barred(s * h[j + 1])).at[j + 1].set(0.0)
             g = g.at[j + 1].set(-s * g[j]).at[j].set(c * g[j])
@@ -401,9 +400,7 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
         r2 = b - matvec(x2)
         rtrue = bitnorm(r2)
         new = (x2, r2, it + 1, rtrue, hist.at[it].set(rtrue), tot + cnt)
-        return jax.tree_util.tree_map(
-            lambda nw, old: jnp.where(active, nw, old), new, carry
-        )
+        return jax.tree_util.tree_map(lambda nw, old: jnp.where(active, nw, old), new, carry)
 
     init = (jnp.zeros_like(b), b, jnp.int32(0), bnorm,
             jnp.zeros(maxiter, jnp.float32), jnp.int32(0))
@@ -453,7 +450,7 @@ def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) ->
 
 def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
                   broadcast="psum", method="gmres", tol=1e-5, fact=None,
-                  bucket=True, ordering=None, **kw):
+                  bucket=True, ordering=None, precond_method=None, **kw):
     """Distributed end-to-end solve: sharded TOP-ILU factorize + solve.
 
     The factorization stays device-resident (``ilu_sharded``), the
@@ -499,8 +496,7 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
     if ordering is not None:
         from .ordering import make_ordering, permuted_system
 
-        n_dev = int((fact.mesh if fact is not None else band_mesh(mesh))
-                    .devices.size)
+        n_dev = int((fact.mesh if fact is not None else band_mesh(mesh)).devices.size)
         ord_ = make_ordering(a, ordering, n_devices=n_dev, band_rows=band_rows)
         if ord_ is not None:
             if caller_fact:
@@ -521,7 +517,7 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
                 ap, ord_.permute_vector(np.asarray(b, np.float32)), k=k,
                 mesh=mesh, band_rows=band_rows, rule=rule, broadcast=broadcast,
                 method=method, tol=tol, fact=fact, bucket=bucket,
-                ordering="natural", **kw)
+                ordering="natural", precond_method=precond_method, **kw)
             if not caller_fact and fact is not None and fact.ordering is None:
                 fact.ordering = ord_  # so `fact=` round-trips re-adopt it
             return _unpermute_results(res, ord_), fact
@@ -543,28 +539,29 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
     if mv_key not in cache:
         cache[mv_key] = make_sharded_ell_matvec(a, mesh)
     matvec = cache[mv_key]
+    # precond_method=None defers to the factorization's own default
+    # ("sweep" unless it was built with something else); "sweep"/"inverse"/
+    # "auto" override per solve — engines for both methods cache on the fact
     precond = None
     if fact is not None:
-        precond = fact.precond(broadcast=broadcast)
+        precond = fact.precond(broadcast=broadcast, method=precond_method)
     elif k is not None:
         f_key = ("sharded_fact", k, rule, band_rows, broadcast, mesh_key)
         if f_key not in cache:
             cache[f_key] = ilu_sharded(a, k, rule=rule, band_rows=band_rows,
                                        mesh=mesh, broadcast=broadcast)
         fact = cache[f_key]
-        precond = fact.precond(broadcast=broadcast)
+        precond = fact.precond(broadcast=broadcast, method=precond_method)
     b = jnp.asarray(b, jnp.float32)
     if b.ndim == 2:
         if method != "gmres":
-            raise ValueError(
-                "batched right-hand sides are supported for method='gmres' only")
+            raise ValueError("batched right-hand sides are supported for method='gmres' only")
         nb = b.shape[0]
         if bucket:
             b = _pad_rhs_batch(b, bucket_batch(nb))
         return gmres_batched(matvec, b, precond, tol=tol, **kw)[:nb], fact
     if b.ndim != 1:
-        raise ValueError(
-            f"solve_sharded expects b of shape (n,) or (batch, n), got {b.shape}")
+        raise ValueError(f"solve_sharded expects b of shape (n,) or (batch, n), got {b.shape}")
     fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]
     res = fn(matvec, b, precond, tol=tol, **kw)
     return res, fact
@@ -572,7 +569,7 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
 
 def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
                broadcast="psum", method="gmres", tol=1e-5, sharded=True,
-               ordering=None, **kw):
+               ordering=None, precond_method=None, **kw):
     """Serving warmup: pre-compile the whole factorize→precondition→solve
     stack for the given RHS batch-size buckets, so the first real request
     of a pre-warmed shape never pays the ~1–2 s first-dispatch XLA compile.
@@ -599,19 +596,22 @@ def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
             _res, fact = solve_sharded(a, zb, k=k, band_rows=band_rows,
                                        rule=rule, broadcast=broadcast,
                                        method=method, tol=tol, mesh=mesh,
-                                       ordering=ordering, **kw)
-            fact.precond(broadcast=broadcast).warm((tgt,))
+                                       ordering=ordering,
+                                       precond_method=precond_method, **kw)
+            fact.precond(broadcast=broadcast, method=precond_method).warm((tgt,))
         else:
             _res, fact = solve_with_ilu(a, zb, k=k, band_rows=band_rows,
                                         method=method, tol=tol,
-                                        ordering=ordering, **kw)
-            fact.precond().warm((tgt,))
+                                        ordering=ordering,
+                                        precond_method=precond_method, **kw)
+            fact.precond(method=precond_method).warm((tgt,))
         out[nb] = time.perf_counter() - t0
     return out
 
 
 def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
-                   band_rows=32, use_pallas=True, ordering=None, **kw):
+                   band_rows=32, use_pallas=True, ordering=None,
+                   precond_method=None, **kw):
     """End-to-end: factorize with ILU(k), then solve. Returns (SolveResult, fact).
 
     ``ordering=`` solves the symmetrically permuted system instead
@@ -645,7 +645,7 @@ def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
             res, fact = solve_with_ilu(
                 ap, ord_.permute_vector(np.asarray(b, np.float32)), k=k,
                 method=method, backend=backend, tol=tol, band_rows=band_rows,
-                use_pallas=use_pallas, **kw)
+                use_pallas=use_pallas, precond_method=precond_method, **kw)
             if fact is not None and fact.ordering is None:
                 fact.ordering = ord_
             return _unpermute_results(res, ord_), fact
@@ -664,7 +664,7 @@ def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
         if f_key not in cache:
             cache[f_key] = ilu(a, k, backend=backend, band_rows=band_rows)
         fact = cache[f_key]
-        precond = fact.precond(use_pallas=use_pallas)
+        precond = fact.precond(use_pallas=use_pallas, method=precond_method)
     b = jnp.asarray(b, jnp.float32)
     if b.ndim == 2:
         if method != "gmres":

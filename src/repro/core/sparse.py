@@ -181,7 +181,9 @@ class ELLMatrix:
             vals[j, 0] = 1.0
             diag_pos[j] = 0
             row_len[j] = 1
-        return ELLMatrix(n=n_pad, width=width, cols=cols, vals=vals, diag_pos=diag_pos, row_len=row_len)
+        return ELLMatrix(
+            n=n_pad, width=width, cols=cols, vals=vals, diag_pos=diag_pos, row_len=row_len
+        )
 
     def values_csr(self, pattern: ILUPattern) -> np.ndarray:
         """Flatten padded vals back onto the pattern's CSR layout."""

@@ -245,9 +245,7 @@ def pilu1_symbolic(a: CSRMatrix, rule: str = "sum") -> ILUPattern:
     fill_key = np.setdiff1d(cand_key, base_key, assume_unique=True)
     # merge base (level 0) and fills (level 1), sorted by (row, col)
     all_key = np.concatenate([base_key, fill_key])
-    all_lev = np.concatenate([
-        np.zeros(len(base_key), np.int16), np.ones(len(fill_key), np.int16)
-    ])
+    all_lev = np.concatenate([np.zeros(len(base_key), np.int16), np.ones(len(fill_key), np.int16)])
     order = np.argsort(all_key, kind="stable")
     key_s = all_key[order]
     j_s = key_s // n
@@ -257,8 +255,7 @@ def pilu1_symbolic(a: CSRMatrix, rule: str = "sum") -> ILUPattern:
     indptr = np.zeros(n + 1, np.int64)
     np.cumsum(out_rowlen, out=indptr[1:])
     diag_ptr = np.bincount(j_s[indices < j_s], minlength=n).astype(np.int32)
-    return ILUPattern(n=n, k=1, indptr=indptr, indices=indices,
-                      levels=levels, diag_ptr=diag_ptr)
+    return ILUPattern(n=n, k=1, indptr=indptr, indices=indices, levels=levels, diag_ptr=diag_ptr)
 
 
 # --------------------------------------------------------------------------

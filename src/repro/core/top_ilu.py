@@ -52,8 +52,7 @@ from .sparse import CSRMatrix, ILUPattern
 
 AXIS = "band"
 
-_ARG_ORDER = ("state", "sched", "piv_addr", "piv_dlane", "piv_dst", "n_piv",
-              "egress", "ingress")
+_ARG_ORDER = ("state", "sched", "piv_addr", "piv_dlane", "piv_dst", "n_piv", "egress", "ingress")
 
 
 def _values_to_csr_order(plan: NumericPlan, pattern: ILUPattern, vals_rm: np.ndarray) -> np.ndarray:
@@ -100,6 +99,10 @@ class ShardedILUFactorization:
     # ``precond()`` stays in permuted row space (``solve_sharded`` owns
     # the boundary on that path).
     ordering: Optional[object] = None
+    # how M^{-1} applies: "sweep" (epoch-scheduled triangular sweeps),
+    # "inverse" (the incomplete-inverse SpMV chain — two collectives per
+    # apply, no epochs), or "auto" (cost-modeled per matrix)
+    precond_method: str = "sweep"
     # structure-keyed shared cache (the engine-store entry): the sharded
     # triangular plan + compiled sweep live here, so refactorizations of
     # the same structure rebind values to one compiled solve engine
@@ -120,32 +123,61 @@ class ShardedILUFactorization:
     def values_csr(self) -> np.ndarray:
         """Gather the sharded factors to the host as CSR-aligned values."""
         dm = np.asarray(self.loc_vals).reshape(self.plan.n_pad, self.plan.width)
-        return _values_to_csr_order(
-            self.plan, self.pattern, self.plan.rows_from_device_major(dm))
+        return _values_to_csr_order(self.plan, self.pattern, self.plan.rows_from_device_major(dm))
 
-    def precond(self, broadcast: str = "gather"):
-        """Cached band-partitioned M^{-1} apply over the sharded values
-        (``repro.core.triangular.ShardedPrecondApply``) — L/U storage stays
+    def _tri_plan(self):
+        """The structure-keyed sharded triangular plan (built on demand)."""
+        from .triangular import build_sharded_triangular_plan
+
+        tp = self._shared.get("tri_plan")
+        if tp is None:
+            tp = self._shared["tri_plan"] = build_sharded_triangular_plan(
+                self.pattern, self.plan.band_rows, self.n_devices)
+        return tp
+
+    def resolve_method(self, method: Optional[str] = None) -> str:
+        """Resolve ``precond_method`` for this mesh: ``"auto"`` races the
+        sweep plan's actual ``comm_summary`` (epoch collectives + exact
+        read-set bytes) against the SpMV-chain model and returns the
+        cheaper apply."""
+        from .inverse import resolve_precond_method
+
+        method = method if method is not None else self.precond_method
+        summary = self._tri_plan().comm_summary() if method == "auto" else None
+        return resolve_precond_method(method, self.pattern, self.n_devices,
+                                      self.plan.band_rows, sweep_summary=summary)
+
+    def precond(self, broadcast: str = "gather", method: Optional[str] = None):
+        """Cached band-partitioned M^{-1} apply over the sharded values.
+
+        ``method`` (default: this factorization's ``precond_method``) picks
+        the engine. ``"sweep"`` →
+        ``repro.core.triangular.ShardedPrecondApply``: L/U storage stays
         sharded and the sweep vector is device-local; communication follows
         the epoch/read-set schedule (DESIGN.md §5.5), with ``broadcast``
         choosing the XLA ``all_gather`` fast path (``"gather"``/``"psum"``)
         or the explicit ``ppermute`` ring (``"ring"``). The triangular plan
         and its compiled sweep are structure-keyed (shared across
         refactorizations); this factorization's values bind to them via one
-        jitted on-device extract."""
+        jitted on-device extract. ``"inverse"`` →
+        ``repro.core.inverse.ShardedInversePrecondApply``: the truncated
+        inverse SpMV chain, two collectives per apply regardless of
+        wavefront depth (``broadcast`` is moot — both exchanges are plain
+        all_gathers). ``"auto"`` races the two cost models."""
+        method = self.resolve_method(method)
+        if method == "inverse":
+            if "inverse" not in self._preconds:
+                from .inverse import ShardedInversePrecondApply
+
+                self._preconds["inverse"] = ShardedInversePrecondApply(
+                    self.pattern, self.values_csr(), self.mesh)
+            return self._preconds["inverse"]
         if broadcast == "psum":
             broadcast = "gather"
         if broadcast not in self._preconds:
-            from .triangular import (
-                ShardedPrecondApply,
-                ShardedTriangularEngine,
-                build_sharded_triangular_plan,
-            )
+            from .triangular import ShardedPrecondApply, ShardedTriangularEngine
 
-            tp = self._shared.get("tri_plan")
-            if tp is None:
-                tp = self._shared["tri_plan"] = build_sharded_triangular_plan(
-                    self.pattern, self.plan.band_rows, self.n_devices)
+            tp = self._tri_plan()
             eng = self._shared.get(("tri_engine", broadcast))
             if eng is None:
                 eng = self._shared[("tri_engine", broadcast)] = (
@@ -172,7 +204,8 @@ class ShardedILUFactorization:
         return ILUFactorization(
             a=self.a, k=self.k, pattern=self.pattern, vals=self.values_csr(),
             symbolic_seconds=self.symbolic_seconds,
-            numeric_seconds=self.numeric_seconds, ordering=self.ordering)
+            numeric_seconds=self.numeric_seconds, ordering=self.ordering,
+            precond_method=self.precond_method)
 
 
 def _sharded_inputs(plan: NumericPlan, mesh: Mesh, keys=None):
@@ -192,8 +225,7 @@ def _build_topilu_engine(a, pattern, band_rows, mesh, broadcast):
     state sharding, and a dict the solve-side engines cache into."""
     d = mesh.devices.size
     plan = make_plan(a, pattern, band_rows=band_rows, n_devices=d)
-    fac = make_superstep_factorizer(plan, axis_name=AXIS if d > 1 else None,
-                                    broadcast=broadcast)
+    fac = make_superstep_factorizer(plan, axis_name=AXIS if d > 1 else None, broadcast=broadcast)
     static = tuple(k for k in _ARG_ORDER if k != "state")
     if d == 1:
         import jax.numpy as jnp
@@ -219,8 +251,7 @@ def _build_topilu_engine(a, pattern, band_rows, mesh, broadcast):
         placed = _sharded_inputs(plan, mesh, keys=static)
         state_sharding = band_shardings(mesh, plan_shard_specs(AXIS))["state"]
         args = tuple(placed[k] for k in static)
-    return dict(plan=plan, fn=fn, args=args, state_sharding=state_sharding,
-                shared={})
+    return dict(plan=plan, fn=fn, args=args, state_sharding=state_sharding, shared={})
 
 
 def topilu_factor_sharded(
@@ -252,8 +283,7 @@ def topilu_factor_sharded(
         store = {}
     entry = store.get(key)
     if entry is None:
-        entry = store[key] = _build_topilu_engine(a, pattern, band_rows, mesh,
-                                                  broadcast)
+        entry = store[key] = _build_topilu_engine(a, pattern, band_rows, mesh, broadcast)
     plan = entry["plan"]
     state = plan_state_array(plan, a)
     if entry["state_sharding"] is not None:

@@ -275,8 +275,7 @@ class PrecondApply:
         return out
 
 
-def wavefront_sweeps_jnp(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
-                         u_rhs_idx, out_perm, b):
+def wavefront_sweeps_jnp(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag, u_rhs_idx, out_perm, b):
     """Fused L-then-U level-major wavefront sweep (pure jnp reference).
 
     The Pallas kernel (`repro.kernels.tri_solve_wavefront`) runs this exact
@@ -672,8 +671,7 @@ class ShardedTriangularEngine:
                        P(ax, None, None)),
             check_vma=False,
         )
-        self.extract = jax.jit(lambda loc: sm_extract(
-            loc, l_src, l_lane, u_src, u_lane, u_dlane))
+        self.extract = jax.jit(lambda loc: sm_extract(loc, l_src, l_lane, u_src, u_lane, u_dlane))
 
         # --- epoch-fused sweep: placed schedule tables --------------------
         # (egress/ingress are ragged per epoch — the epoch loop is unrolled,
@@ -798,8 +796,7 @@ class ShardedTriangularEngine:
         ax = self.AXIS
 
         def sds(shape, spec):
-            return jax.ShapeDtypeStruct(
-                shape, jnp.float32, sharding=NamedSharding(self.mesh, spec))
+            return jax.ShapeDtypeStruct(shape, jnp.float32, sharding=NamedSharding(self.mesh, spec))
 
         return (
             sds((p.n_devices, p.nl_levels, p.maxr_l, p.WL), P(ax, None, None, None)),
@@ -881,8 +878,7 @@ class ShardedPrecondApply:
             fit = [w for w in self._aot if w >= nb]
             if fit and nb not in self._aot:
                 tgt = min(fit)
-                bs = jnp.concatenate(
-                    [bs, jnp.zeros((tgt - nb, self.n), jnp.float32)])
+                bs = jnp.concatenate([bs, jnp.zeros((tgt - nb, self.n), jnp.float32)])
         return self._sweep(bs)[:nb]
 
     def warm(self, batch_sizes=(1,)):
@@ -916,7 +912,9 @@ def make_triangular_solver(pattern: ILUPattern, vals: np.ndarray,
     return PrecondApply(pattern, vals, use_pallas=use_pallas)
 
 
-def make_jacobi_triangular_solver(pattern: ILUPattern, vals: np.ndarray, sweeps: int = 8) -> Callable:
+def make_jacobi_triangular_solver(
+    pattern: ILUPattern, vals: np.ndarray, sweeps: int = 8
+) -> Callable:
     """Approximate triangular solve by Jacobi iteration (x <- D^{-1}(b - R x)).
 
     Converges because triangular Jacobi iteration is nilpotent; ``sweeps``

@@ -34,9 +34,7 @@ class SyntheticLM:
         self.seed = seed
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, step, self.host_index])
-        )
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, step, self.host_index]))
         B, S = self.local_batch, self.seq_len
         zipf = rng.zipf(1.3, size=(B, S + 1))
         toks = np.minimum(zipf, self.vocab - 1).astype(np.int32)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused incomplete-inverse apply — x = Z (W b).
+
+The whole ``precond_method="inverse"`` apply in one kernel launch: two
+back-to-back sentinel-padded ELL SpMVs (W then Z) with the intermediate
+vector y = W b living entirely in VMEM — no HBM round-trip between the
+factors, unlike two separate ``spmv_ell`` launches. Single block: both
+gathers read the full intermediate vector, so rows are not tiled (the
+wavefront-free apply is bandwidth-bound, not compute-bound; for n <= 2^20
+f32 the operands fit VMEM comfortably).
+
+The body delegates to ``repro.core.inverse.inverse_chain_jnp`` on values
+read from the refs — kernel and jnp reference share one implementation, so
+they are bit-identical to each other and to ``inverse_apply_ref`` by
+construction (every reduction is a ``masked_lane_sum``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .config import resolve_interpret
+
+
+def _kernel(w_cols_ref, w_vals_ref, z_cols_ref, z_vals_ref, b_ref, o_ref):
+    from repro.core.inverse import inverse_chain_jnp
+
+    o_ref[...] = inverse_chain_jnp(
+        w_cols_ref[...], w_vals_ref[...], z_cols_ref[...], z_vals_ref[...],
+        b_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def inverse_chain(w_cols, w_vals, z_cols, z_vals, b, *, interpret=True):
+    """w_cols/w_vals: (n, WI); z_cols/z_vals: (n, ZI); b: (n,). x = Z (W b)."""
+    n = b.shape[0]
+    assert w_cols.shape[0] == n and z_cols.shape[0] == n
+    assert w_vals.shape == w_cols.shape and z_vals.shape == z_cols.shape
+    whole = [pl.BlockSpec(a.shape, lambda *_, s=a.shape: (0,) * len(s))
+             for a in (w_cols, w_vals, z_cols, z_vals, b)]
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=whole,
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(w_cols, w_vals, z_cols, z_vals, b)

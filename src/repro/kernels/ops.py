@@ -13,6 +13,7 @@ import os
 
 import jax.numpy as jnp
 
+from . import inverse_chain as _ic
 from . import panel_update as _pu
 from . import spmv_ell as _sp
 from . import tri_solve as _ts
@@ -81,11 +82,9 @@ def factor_wavefront(op_row, op_lane, op_piv, op_dlane, op_dst, dst_flat, a_vals
     return _pu.factor_wavefront(*args, interpret=_interpret())
 
 
-def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
-                        u_rhs_idx, out_perm, b):
+def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag, u_rhs_idx, out_perm, b):
     """Fused (LU)^{-1} b over level-major plan arrays (bit-compatible)."""
-    args = (l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
-            u_rhs_idx, out_perm, b)
+    args = (l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag, u_rhs_idx, out_perm, b)
     if _DISABLED:
         return _ref.tri_solve_wavefront_ref(*args)
     return _tw.tri_solve_wavefront(*args, interpret=_interpret())
@@ -104,6 +103,15 @@ def epoch_sweep(x, cols, vals, rhs, diag=None, *, start, limit):
         return epoch_sweep_jnp(x, cols, vals, rhs, diag, start, limit)
     return _te.epoch_sweep(x, cols, vals, rhs, diag, start=start, limit=limit,
                            interpret=_interpret())
+
+
+def inverse_chain(w_cols, w_vals, z_cols, z_vals, b):
+    """x = Z (W b): the fused incomplete-inverse preconditioner apply."""
+    if _DISABLED:
+        from repro.core.inverse import inverse_chain_jnp
+
+        return inverse_chain_jnp(w_cols, w_vals, z_cols, z_vals, b)
+    return _ic.inverse_chain(w_cols, w_vals, z_cols, z_vals, b, interpret=_interpret())
 
 
 def spmv_ell(cols, vals, x, bm=512):

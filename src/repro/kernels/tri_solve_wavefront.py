@@ -53,8 +53,7 @@ def tri_solve_wavefront(l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
     ``b``: (n,). Returns x with the same dtype as ``b``.
     """
     n = b.shape[0]
-    args = (l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag,
-            u_rhs_idx, out_perm, b)
+    args = (l_cols, l_vals, l_rhs_idx, u_cols, u_vals, u_diag, u_rhs_idx, out_perm, b)
     return pl.pallas_call(
         _kernel,
         in_specs=[pl.BlockSpec(a.shape, lambda *_, s=a.shape: (0,) * len(s))

@@ -99,9 +99,7 @@ def _build_cell(arch, shape_name, multi_pod, opts):
 
     # ---- pass A: production form (scan over layers) -> compile + memory ---
     t0 = time.time()
-    compiled_a, kind = _lower_and_compile(
-        cfg, shape_name, mesh, opts, opts.get("microbatches", 1)
-    )
+    compiled_a, kind = _lower_and_compile(cfg, shape_name, mesh, opts, opts.get("microbatches", 1))
     t_a = time.time() - t0
     mem = compiled_a.memory_analysis()
     print(mem)  # proves it fits

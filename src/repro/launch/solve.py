@@ -27,7 +27,9 @@ def main():
     a = matgen(args.n, density=density, seed=args.seed)
     b = np.random.default_rng(args.seed + 1).standard_normal(args.n).astype(np.float32)
     t0 = time.perf_counter()
-    res, fact = solve_with_ilu(a, b, k=args.k, method=args.method, backend=args.backend, band_rows=args.band_rows)
+    res, fact = solve_with_ilu(
+        a, b, k=args.k, method=args.method, backend=args.backend, band_rows=args.band_rows
+    )
     dt = time.perf_counter() - t0
     print(f"n={args.n} nnz={a.nnz} k={args.k} backend={args.backend}")
     print(f"fill {a.nnz} -> {fact.nnz}; symbolic {fact.symbolic_seconds:.3f}s "

@@ -131,9 +131,7 @@ def chunked_attention(
         m0 = jnp.full((B, cq, Hkv, g), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, cq, Hkv, g), jnp.float32)
         o0 = jnp.zeros((B, cq, Hkv, g, Dv), jnp.float32)
-        (m_f, l_f, o_f), _ = jax.lax.scan(
-            kv_step, (m0, l0, o0), lo + jnp.arange(n_blocks)
-        )
+        (m_f, l_f, o_f), _ = jax.lax.scan(kv_step, (m0, l0, o0), lo + jnp.arange(n_blocks))
         o = o_f / jnp.maximum(l_f[..., None], 1e-30)
         outs.append(o.reshape(B, cq, H, Dv).astype(q.dtype))
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
@@ -173,7 +171,12 @@ def init_gqa(key, cfg, kg=None):
         "wq": dense_init(kg(), (d, H * hd), dt),
         "wk": dense_init(kg(), (d, Hkv * hd), dt),
         "wv": dense_init(kg(), (d, Hkv * hd), dt),
-        "wo": dense_init(kg(), (H * hd, d), dt, scale=1.0 / math.sqrt(2 * cfg.n_layers * H * hd / d) / math.sqrt(d)),
+        "wo": dense_init(
+            kg(),
+            (H * hd, d),
+            dt,
+            scale=1.0 / math.sqrt(2 * cfg.n_layers * H * hd / d) / math.sqrt(d),
+        ),
     }
     if cfg.qkv_bias:
         p["bq"] = jnp.zeros((H * hd,), dt)

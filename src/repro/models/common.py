@@ -120,9 +120,7 @@ def apply_rope(x, cos, sin):
     x1, x2 = x[..., :d2], x[..., d2:]
     c = cos[..., :, None, :]
     s = sin[..., :, None, :]
-    return jnp.concatenate(
-        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
-    ).astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
 
 
 # --------------------------------------------------------------------------

@@ -152,9 +152,7 @@ def moe_ffn(p, x, cfg):
         y_assign = jnp.where(
             keep_g[:, None], yef[jnp.minimum(slot_g, E * C - 1)], 0.0
         ) * w_g[:, None].astype(yef.dtype)
-        return jnp.zeros((Tg, d), x.dtype).at[t_g].add(
-            y_assign.astype(x.dtype), mode="drop"
-        )
+        return jnp.zeros((Tg, d), x.dtype).at[t_g].add(y_assign.astype(x.dtype), mode="drop")
 
     y = jax.vmap(combine)(ye_flat, keep, slot, sorted_w, sorted_t)
     y = maybe_shard(y, dp, None, None).reshape(T, d)

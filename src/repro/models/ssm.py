@@ -51,12 +51,7 @@ def _causal_conv4(u, w, state=None):
     if state is None:
         state = jnp.zeros((u.shape[0], 3, u.shape[2]), u.dtype)
     ext = jnp.concatenate([state, u], axis=1)  # (B, S+3, di)
-    y = (
-        ext[:, 0:-3] * w[0]
-        + ext[:, 1:-2] * w[1]
-        + ext[:, 2:-1] * w[2]
-        + ext[:, 3:] * w[3]
-    )
+    y = (ext[:, 0:-3] * w[0] + ext[:, 1:-2] * w[1] + ext[:, 2:-1] * w[2] + ext[:, 3:] * w[3])
     new_state = ext[:, -3:]
     return y, new_state
 
@@ -94,13 +89,9 @@ def ssm_forward(p, x, cfg, state=None):
     u = jax.nn.silu(u)
     bc = (u @ p["w_bc"]).astype(jnp.float32)
     B_, C_ = bc[..., :N], bc[..., N:]
-    dt_ = jax.nn.softplus(
-        ((u @ p["w_dt1"]) @ p["w_dt2"]).astype(jnp.float32) + p["dt_bias"]
-    )
+    dt_ = jax.nn.softplus(((u @ p["w_dt1"]) @ p["w_dt2"]).astype(jnp.float32) + p["dt_bias"])
     a = -jnp.exp(p["a_log"])  # (di,N), negative => stable decay
-    h0 = (
-        jnp.zeros((B, di, N), jnp.float32) if state is None else state["h"]
-    )
+    h0 = (jnp.zeros((B, di, N), jnp.float32) if state is None else state["h"])
     h, y = _ssm_scan(u.astype(jnp.float32), dt_, B_, C_, a, h0)
     y = y + u.astype(jnp.float32) * p["d_skip"]
     out = y.astype(x.dtype) @ p["out_proj"]

@@ -108,9 +108,7 @@ def _maybe_remat(cfg, fn):
     if cfg.remat == "full":
         return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
     if cfg.remat == "dots":
-        return jax.checkpoint(
-            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
-        )
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
     return fn
 
 
@@ -154,8 +152,7 @@ def layer_decode(cfg, lp, x, cache, enc_kv=None):
         hc = apply_norm(cfg, lp["cross_norm"], x)
         q = (hc @ lp["cross"]["wq"]).reshape(B, 1, H, hd)
         T = cache["cross_k"].shape[1]
-        o = decode_attention(q, cache["cross_k"], cache["cross_v"],
-                             jnp.full((B,), T, jnp.int32))
+        o = decode_attention(q, cache["cross_k"], cache["cross_v"], jnp.full((B,), T, jnp.int32))
         x = x + o.reshape(B, 1, -1) @ lp["cross"]["wo"]
         new_cache["cross_k"] = cache["cross_k"]
         new_cache["cross_v"] = cache["cross_v"]
@@ -227,10 +224,6 @@ def init_layer_caches(cfg, batch, cache_len, n_layers=None, with_cross=None):
             "conv": jnp.zeros((L, batch, 3, di), cfg.param_dtype),
         }
     if with_cross and cfg.encoder_seq:
-        caches["cross_k"] = jnp.zeros(
-            (L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), dt
-        )
-        caches["cross_v"] = jnp.zeros(
-            (L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), dt
-        )
+        caches["cross_k"] = jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), dt)
+        caches["cross_v"] = jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), dt)
     return caches

@@ -47,9 +47,7 @@ def init(params):
 
 
 def global_norm(tree):
-    return jnp.sqrt(
-        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
-    )
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)))
 
 
 def update(c: AdamWConfig, grads, state, params):

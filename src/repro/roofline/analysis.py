@@ -162,7 +162,9 @@ def extract_costs(compiled) -> Dict[str, float]:
     }
 
 
-def extrapolate_costs(c1: Dict[str, float], c2: Dict[str, float], n_layers: int) -> Dict[str, float]:
+def extrapolate_costs(
+    c1: Dict[str, float], c2: Dict[str, float], n_layers: int
+) -> Dict[str, float]:
     """Layer-homogeneous extrapolation: cost(L) = c1 + (L-1)*(c2-c1).
 
     c1/c2 are 1-layer/2-layer unrolled modules. Exact for stacks whose

@@ -48,9 +48,7 @@ def train(
     restored = None
     ck = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
     if ckpt_dir and latest_step(ckpt_dir) is not None:
-        (params, opt_state), manifest = restore(
-            ckpt_dir, None, (params, opt_state)
-        )
+        (params, opt_state), manifest = restore(ckpt_dir, None, (params, opt_state))
         start = manifest["step"]
         restored = start
 

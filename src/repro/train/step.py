@@ -66,9 +66,7 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, microbatches: int = 1,
 def make_serve_step(cfg):
     def serve_step(params, cache, tokens, frames=None):
         logits, cache = M.decode_step(cfg, params, cache, tokens, frames=frames)
-        next_tok = jnp.argmax(
-            logits[..., : cfg.vocab_real], axis=-1
-        ).astype(jnp.int32)
+        next_tok = jnp.argmax(logits[..., : cfg.vocab_real], axis=-1).astype(jnp.int32)
         return next_tok, logits, cache
 
     return serve_step

@@ -38,7 +38,9 @@ def main():
         "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
     }
     if cfg.family == "vlm":
-        batch["vision_embeds"] = jax.ShapeDtypeStruct((B, cfg.vision_patches, cfg.d_model), cfg.act_dtype)
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_patches, cfg.d_model), cfg.act_dtype
+        )
     if cfg.family == "audio":
         batch["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), cfg.act_dtype)
     b_shard = rules.batch_shardings(batch)

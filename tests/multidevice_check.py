@@ -19,6 +19,14 @@ assert the sharded ordered factorization bitwise-equal to the sequential
 oracle on the permuted matrix, and assert single- and multi-RHS
 ``solve_sharded(ordering=...)`` bitwise-equal to the single-device
 *permuted* solve mapped back through the permutation.
+
+``--inverse`` runs the incomplete-inverse contract instead (any device
+count, including 1): over ordering ∈ {natural, rcm, fusion} × k ∈ {0,1,2},
+the inverse factors and the distributed SpMV-chain apply (single and
+batched RHS) of the permuted system must be bitwise-equal to the
+single-threaded inverse oracle of the permuted matrix; plus one
+end-to-end ``solve_sharded(precond_method="inverse")`` bitwise vs the
+single-device inverse solve mapped back through the permutation.
 """
 import os
 import sys
@@ -47,8 +55,7 @@ def check_ordering(n, k, band_rows, broadcast, name):
     # sharded factors == sequential oracle of the permuted matrix
     pat = pilu1_symbolic(ap) if k == 1 else symbolic_ilu_k(ap, k)
     want = numeric_ilu_ref(ap, pat)
-    fact = ilu_sharded(a, k, band_rows=band_rows, broadcast=broadcast,
-                       ordering=ord_)
+    fact = ilu_sharded(a, k, band_rows=band_rows, broadcast=broadcast, ordering=ord_)
     got = fact.values_csr()
     assert np.array_equal(got.view(np.int32), want.view(np.int32)), \
         "ordered sharded factors != sequential oracle on permuted matrix"
@@ -65,12 +72,10 @@ def check_ordering(n, k, band_rows, broadcast, name):
 
     # multi-RHS through the bucketed batch path: per-column bitwise
     B = np.random.default_rng(8).standard_normal((3, n)).astype(np.float32)
-    rs, _ = solve_sharded(a, B, k=k, band_rows=band_rows, tol=1e-6,
-                          broadcast=broadcast, fact=fact)
+    rs, _ = solve_sharded(a, B, k=k, band_rows=band_rows, tol=1e-6, broadcast=broadcast, fact=fact)
     assert len(rs) == 3
     for i, r in enumerate(rs):
-        r1, _ = solve_with_ilu(ap, B[i][ord_.perm], k=k, tol=1e-6,
-                               use_pallas=False)
+        r1, _ = solve_with_ilu(ap, B[i][ord_.perm], k=k, tol=1e-6, use_pallas=False)
         assert r.converged and r.iterations == r1.iterations, i
         assert np.array_equal(r.x.view(np.int32),
                               r1.x[ord_.iperm].view(np.int32)), \
@@ -80,8 +85,98 @@ def check_ordering(n, k, band_rows, broadcast, name):
           f"devices={d} ordering={name} nnz={pat.nnz} bitwise-equal")
 
 
+def check_inverse(n, band_rows, broadcast):
+    import numpy as np
+    import jax
+
+    from repro.core import matgen, numeric_ilu_ref, symbolic_ilu_k, pilu1_symbolic
+    from repro.core.inverse import InversePrecondApply, ShardedInversePrecondApply
+    from repro.core.inverse_ref import (
+        inverse_apply_ref,
+        inverse_pattern_ref,
+        inverse_values_ref,
+    )
+    from repro.core.ordering import make_ordering, permuted_system
+    from repro.core.solvers import solve_sharded, solve_with_ilu
+
+    d = len(jax.devices())
+    mesh = None
+    if d > 1:
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()), ("band",))
+    a = matgen(n, density=min(0.08, 12.0 / n), seed=42)
+    rng = np.random.default_rng(7)
+    b = rng.standard_normal(n).astype(np.float32)
+    B = rng.standard_normal((3, n)).astype(np.float32)
+
+    for name in ("natural", "rcm", "fusion"):
+        ord_ = make_ordering(a, name, n_devices=d, band_rows=band_rows)
+        ap = a if ord_ is None else permuted_system(a, ord_)
+        for k in (0, 1, 2):
+            # the single-threaded oracle of the *permuted* matrix is the
+            # anchor: pattern, values, and applies must all match it bitwise
+            pat = pilu1_symbolic(ap) if k == 1 else symbolic_ilu_k(ap, k)
+            vals = numeric_ilu_ref(ap, pat)
+            wc, zc = inverse_pattern_ref(pat)
+            wv, zv = inverse_values_ref(pat, vals, wc, zc)
+            if d > 1:
+                p = ShardedInversePrecondApply(pat, vals, mesh)
+                got_w, got_z = np.asarray(p.base.w_vals), np.asarray(p.base.z_vals)
+            else:
+                p = InversePrecondApply(pat, vals, use_pallas=False)
+                got_w, got_z = np.asarray(p.w_vals), np.asarray(p.z_vals)
+            assert np.array_equal(p.plan.w_cols, wc), (name, k)
+            assert np.array_equal(p.plan.z_cols, zc), (name, k)
+            assert np.array_equal(got_w.view(np.int32), wv.view(np.int32)), \
+                f"W values != inverse oracle ({name}, k={k})"
+            assert np.array_equal(got_z.view(np.int32), zv.view(np.int32)), \
+                f"Z values != inverse oracle ({name}, k={k})"
+            want_1 = inverse_apply_ref(wc, wv, zc, zv, b)
+            want_B = inverse_apply_ref(wc, wv, zc, zv, B)
+            assert np.array_equal(np.asarray(p(b)).view(np.int32),
+                                  want_1.view(np.int32)), \
+                f"inverse apply != oracle ({name}, k={k}, devices={d})"
+            assert np.array_equal(np.asarray(p.batched(B)).view(np.int32),
+                                  want_B.view(np.int32)), \
+                f"batched inverse apply != oracle ({name}, k={k}, devices={d})"
+
+    # one end-to-end integration config: the full sharded pipeline with
+    # precond_method="inverse" == the single-device inverse solve, mapped
+    # back through the permutation (single RHS + bucketed 3-RHS batch)
+    name = "fusion" if d > 1 else "natural"
+    ord_ = make_ordering(a, name, n_devices=d, band_rows=band_rows)
+    ap = a if ord_ is None else permuted_system(a, ord_)
+    bp = b if ord_ is None else b[ord_.perm]
+    r_sh, fact = solve_sharded(a, b, k=1, band_rows=band_rows, tol=1e-6,
+                               broadcast=broadcast, ordering=ord_,
+                               precond_method="inverse")
+    r_1p, _ = solve_with_ilu(ap, bp, k=1, tol=1e-6, use_pallas=False, precond_method="inverse")
+    x_sh = r_sh.x if ord_ is None else r_sh.x[ord_.perm]
+    assert r_sh.converged and r_sh.iterations == r_1p.iterations
+    assert np.array_equal(x_sh.view(np.int32), r_1p.x.view(np.int32)), \
+        "inverse-preconditioned distributed solve != single-device solve"
+    rs, _ = solve_sharded(a, B, k=1, band_rows=band_rows, tol=1e-6,
+                          broadcast=broadcast, fact=fact,
+                          precond_method="inverse")
+    assert len(rs) == 3
+    for i, r in enumerate(rs):
+        r1, _ = solve_with_ilu(ap, B[i] if ord_ is None else B[i][ord_.perm],
+                               k=1, tol=1e-6, use_pallas=False,
+                               precond_method="inverse")
+        assert r.converged and r.iterations == r1.iterations, i
+        xi = r.x if ord_ is None else r.x[ord_.perm]
+        assert np.array_equal(xi.view(np.int32), r1.x.view(np.int32)), \
+            f"inverse-preconditioned batched column {i} != single-device solve"
+
+    print(f"OK: n={n} band_rows={band_rows} broadcast={broadcast} devices={d} "
+          f"inverse orderings=natural,rcm,fusion k=0,1,2 bitwise-equal")
+
+
 def main():
     n, k, band_rows, broadcast = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3]), sys.argv[4]
+    if "--inverse" in sys.argv:
+        return check_inverse(n, band_rows, broadcast)
     if "--ordering" in sys.argv:
         return check_ordering(n, k, band_rows, broadcast,
                               sys.argv[sys.argv.index("--ordering") + 1])

@@ -1,0 +1,32 @@
+"""Incomplete-inverse bit-compat across device counts and orderings.
+
+Drives ``multidevice_check.py --inverse`` in a subprocess per device count
+(JAX locks the host device count at first init): at D ∈ {1, 2, 4}, the
+inverse factors and SpMV-chain applies of the permuted system — for
+ordering ∈ {natural, rcm, fusion} × k ∈ {0, 1, 2} — must be bitwise-equal
+to the single-threaded inverse oracle of the permuted matrix, and the
+end-to-end ``solve_sharded(precond_method="inverse")`` (single + bucketed
+multi-RHS) bitwise-equal to the single-device inverse solve.
+"""
+import os
+import sys
+
+import pytest
+
+from subproc import run_checked
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_check.py")
+
+
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_inverse_bitwise_across_devices(devices):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"  # no TPU probing in the child (see
+    # test_topilu_multidevice.py for why this matters on CPU CI)
+    rc, out, err = run_checked(
+        [sys.executable, SCRIPT, "64", "1", "16", "psum", "--inverse"],
+        env=env, timeout=420,
+    )
+    assert rc == 0, f"stdout:\n{out}\nstderr:\n{err[-2000:]}"
+    assert "bitwise-equal" in out

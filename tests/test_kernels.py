@@ -29,7 +29,9 @@ def _tri_unit_lower(bs, dtype):
 
 
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
-@pytest.mark.parametrize("m,n,k", [(8, 8, 8), (64, 64, 32), (128, 256, 128), (96, 40, 72), (256, 128, 256)])
+@pytest.mark.parametrize(
+    "m,n,k", [(8, 8, 8), (64, 64, 32), (128, 256, 128), (96, 40, 72), (256, 128, 256)]
+)
 def test_panel_update_sweep(m, n, k, dtype):
     a = RNG.standard_normal((m, k)).astype(np.float32)
     b = RNG.standard_normal((k, n)).astype(np.float32)
@@ -123,7 +125,9 @@ def _rand_ell(n, w, rng, empty_every=5):
     return cols, vals
 
 
-@pytest.mark.parametrize("n,w,bm", [(64, 3, 64), (100, 7, 32), (33, 1, 8), (129, 5, 64), (256, 13, 512)])
+@pytest.mark.parametrize(
+    "n,w,bm", [(64, 3, 64), (100, 7, 32), (33, 1, 8), (129, 5, 64), (256, 13, 512)]
+)
 def test_spmv_ell_bitwise_vs_ref(n, w, bm):
     rng = np.random.default_rng(n * 31 + w)
     cols, vals = _rand_ell(n, w, rng)
@@ -193,8 +197,7 @@ def test_compiled_spmv_ell_bitwise():
 
     cols, vals = _rand_ell(256, 8, np.random.default_rng(7))
     x = np.random.default_rng(8).standard_normal(256).astype(np.float32)
-    got = sp.spmv_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x),
-                      bm=256, interpret=False)
+    got = sp.spmv_ell(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x), bm=256, interpret=False)
     want = ref.spmv_ell_ref(jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x))
     _assert_bitwise(got, want)
 
@@ -267,8 +270,7 @@ def test_epoch_sweep_kernel_bitwise(with_diag):
     x0, cols, vals, rhs, diag, scratch = _epoch_args()
     d = diag if with_diag else None
     want = epoch_sweep_jnp(x0, cols, vals, rhs, d, 0, scratch)
-    got = te.epoch_sweep(x0, cols, vals, rhs, d, start=0, limit=scratch,
-                         interpret=True)
+    got = te.epoch_sweep(x0, cols, vals, rhs, d, start=0, limit=scratch, interpret=True)
     _assert_bitwise(got, want)
     # the ops wrapper (REPRO_DISABLE_PALLAS escape hatch shares the impl)
     _assert_bitwise(ops.epoch_sweep(x0, cols, vals, rhs, d, start=0,
@@ -284,6 +286,5 @@ def test_compiled_epoch_sweep_bitwise(with_diag):
     x0, cols, vals, rhs, diag, scratch = _epoch_args(k=2, seed=9)
     d = diag if with_diag else None
     want = epoch_sweep_jnp(x0, cols, vals, rhs, d, 0, scratch)
-    got = te.epoch_sweep(x0, cols, vals, rhs, d, start=0, limit=scratch,
-                         interpret=False)
+    got = te.epoch_sweep(x0, cols, vals, rhs, d, start=0, limit=scratch, interpret=False)
     _assert_bitwise(got, want)

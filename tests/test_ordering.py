@@ -54,12 +54,10 @@ def test_permutation_round_trip(n, density, seed):
         assert np.array_equal(ordering.iperm[ordering.perm], np.arange(n))
         assert np.array_equal(ordering.perm[ordering.iperm], np.arange(n))
         x = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
-        assert np.array_equal(
-            ordering.unpermute_vector(ordering.permute_vector(x)), x)
+        assert np.array_equal(ordering.unpermute_vector(ordering.permute_vector(x)), x)
         # 2-D (batch) boundary
         xb = np.stack([x, 2 * x])
-        assert np.array_equal(
-            ordering.unpermute_vector(ordering.permute_vector(xb)), xb)
+        assert np.array_equal(ordering.unpermute_vector(ordering.permute_vector(xb)), xb)
 
 
 def test_permute_csr_matches_dense():
@@ -67,8 +65,7 @@ def test_permute_csr_matches_dense():
     ordering = rcm_ordering(a)
     ap = permute_csr(a, ordering.perm)
     d = a.to_dense()
-    assert np.array_equal(ap.to_dense(),
-                          d[np.ix_(ordering.perm, ordering.perm)])
+    assert np.array_equal(ap.to_dense(), d[np.ix_(ordering.perm, ordering.perm)])
     # permuting back is the inverse permutation
     back = permute_csr(ap, ordering.iperm)
     assert np.array_equal(back.to_dense(), d)
@@ -183,25 +180,19 @@ def test_ordered_solve_boundary(spec):
     b = rng.standard_normal(a.n).astype(np.float32)
     bs = rng.standard_normal((3, a.n)).astype(np.float32)
 
-    res, fact = solve_with_ilu(a, b, k=1, tol=1e-6, use_pallas=False,
-                               ordering=spec)
+    res, fact = solve_with_ilu(a, b, k=1, tol=1e-6, use_pallas=False, ordering=spec)
     ordering = fact.ordering
     ap = permuted_system(a, ordering)
-    ref, _ = solve_with_ilu(ap, b[ordering.perm], k=1, tol=1e-6,
-                            use_pallas=False)
+    ref, _ = solve_with_ilu(ap, b[ordering.perm], k=1, tol=1e-6, use_pallas=False)
     assert res.converged and res.iterations == ref.iterations
-    assert np.array_equal(res.x.view(np.int32),
-                          ref.x[ordering.iperm].view(np.int32))
+    assert np.array_equal(res.x.view(np.int32), ref.x[ordering.iperm].view(np.int32))
     r = b - a.to_dense() @ res.x
     assert np.linalg.norm(r) <= 1e-5 * np.linalg.norm(b) * 10
 
-    rs, _ = solve_with_ilu(a, bs, k=1, tol=1e-6, use_pallas=False,
-                           ordering=spec)
-    refs, _ = solve_with_ilu(ap, bs[:, ordering.perm], k=1, tol=1e-6,
-                             use_pallas=False)
+    rs, _ = solve_with_ilu(a, bs, k=1, tol=1e-6, use_pallas=False, ordering=spec)
+    refs, _ = solve_with_ilu(ap, bs[:, ordering.perm], k=1, tol=1e-6, use_pallas=False)
     for got, want in zip(rs, refs):
-        assert np.array_equal(got.x.view(np.int32),
-                              want.x[ordering.iperm].view(np.int32))
+        assert np.array_equal(got.x.view(np.int32), want.x[ordering.iperm].view(np.int32))
 
 
 def test_solve_sharded_rejects_mismatched_fact_ordering():
@@ -215,15 +206,13 @@ def test_solve_sharded_rejects_mismatched_fact_ordering():
     _, nat_fact = solve_sharded(a, b, k=1, band_rows=16, tol=1e-6)
     assert nat_fact.ordering is None
     with pytest.raises(ValueError, match="different row ordering"):
-        solve_sharded(a, b, k=1, band_rows=16, tol=1e-6, fact=nat_fact,
-                      ordering="rcm")
+        solve_sharded(a, b, k=1, band_rows=16, tol=1e-6, fact=nat_fact, ordering="rcm")
     assert nat_fact.ordering is None  # unstamped: fact.solve stays natural
     # the legitimate round-trips still work: adopt, or pass the same spec
     _, of = solve_sharded(a, b, k=1, band_rows=16, tol=1e-6, ordering="rcm")
     assert of.ordering is not None
     r1, _ = solve_sharded(a, b, k=1, band_rows=16, tol=1e-6, fact=of)
-    r2, _ = solve_sharded(a, b, k=1, band_rows=16, tol=1e-6, fact=of,
-                          ordering="rcm")
+    r2, _ = solve_sharded(a, b, k=1, band_rows=16, tol=1e-6, fact=of, ordering="rcm")
     assert np.array_equal(r1.x.view(np.int32), r2.x.view(np.int32))
 
 
@@ -235,10 +224,8 @@ def test_ordered_fact_solve_boundary():
     fact = ilu(a, 1, ordering="rcm")
     ref = ilu(permuted_system(a, fact.ordering), 1)
     got = fact.solve(b)
-    want = fact.ordering.unpermute_vector(
-        ref.solve(fact.ordering.permute_vector(b)))
-    assert np.array_equal(np.asarray(got).view(np.int32),
-                          np.asarray(want).view(np.int32))
+    want = fact.ordering.unpermute_vector(ref.solve(fact.ordering.permute_vector(b)))
+    assert np.array_equal(np.asarray(got).view(np.int32), np.asarray(want).view(np.int32))
 
 
 # --------------------------------------------------------------------------

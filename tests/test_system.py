@@ -11,8 +11,7 @@ from repro.train.loop import train
 
 def _tiny_cfg():
     cfg = get_config("smollm-135m").reduced()
-    return dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128, q_chunk=32,
-                               kv_chunk=32)
+    return dataclasses.replace(cfg, n_layers=2, d_model=64, d_ff=128, q_chunk=32, kv_chunk=32)
 
 
 def test_training_reduces_loss():

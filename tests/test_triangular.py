@@ -24,7 +24,9 @@ def test_solve_matches_scipy(k):
     L, U = split_lu(pat, vals)
     rng = np.random.default_rng(1)
     b = rng.standard_normal(a.n).astype(np.float32)
-    want = spla.spsolve_triangular(U.tocsr(), spla.spsolve_triangular(L.tocsr(), b, lower=True), lower=False)
+    want = spla.spsolve_triangular(
+        U.tocsr(), spla.spsolve_triangular(L.tocsr(), b, lower=True), lower=False
+    )
     solve = make_triangular_solver(pat, vals)
     got = np.asarray(solve(b))
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
@@ -36,7 +38,9 @@ def test_solve_poisson():
     vals = numeric_ilu_ref(a, pat)
     L, U = split_lu(pat, vals)
     b = np.ones(a.n, np.float32)
-    want = spla.spsolve_triangular(U.tocsr(), spla.spsolve_triangular(L.tocsr(), b, lower=True), lower=False)
+    want = spla.spsolve_triangular(
+        U.tocsr(), spla.spsolve_triangular(L.tocsr(), b, lower=True), lower=False
+    )
     got = np.asarray(make_triangular_solver(pat, vals)(b))
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
@@ -110,8 +114,7 @@ def test_solver_bitwise_vs_sequential_numpy_substitution():
             for c, v in zip(pat.indices[s + d + 1:e], vals[s + d + 1:e]):
                 acc = f32(acc + f32(f32(v) * x[c]))
             x[j] = f32(f32(y[j] - acc) / f32(vals[s + d]))
-        for solver in (make_triangular_solver(pat, vals),
-                       PrecondApply(pat, vals, use_pallas=True)):
+        for solver in (make_triangular_solver(pat, vals), PrecondApply(pat, vals, use_pallas=True)):
             got = np.asarray(solver(b))
             np.testing.assert_array_equal(got.view(np.int32), x.view(np.int32))
 
