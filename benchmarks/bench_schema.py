@@ -145,8 +145,44 @@ _FACTOR_CASE = {
     "bitwise_equal_oracle": bool,
 }
 
+_SERVE_CASE = {
+    "n": int,
+    "k": int,
+    "restart": int,
+    "maxiter": int,
+    "buckets": [int],
+    "tenants": int,
+    "requests": int,
+    "wall_seconds": NUM,
+    "solves_per_sec": NUM,
+    "raw_solve_solves_per_sec": NUM,
+    "batches": int,
+    "occupancy_mean": NUM,
+    "mean_batch_solve_seconds": NUM,
+    "warmup_seconds": NUM,
+    "compiles_warmup": int,
+    "compiles_after_warmup": int,
+    "cache_hit_rate": NUM,
+    "refactorizations": int,
+    "p50_seconds": NUM,
+    "p99_seconds": NUM,
+    "per_tenant": [{
+        "tenant": str,
+        "count": int,
+        "p50_seconds": NUM,
+        "p99_seconds": NUM,
+    }],
+    "bitwise_equal_solo": bool,
+    "bitwise_checked": int,
+}
+
 #: filename -> schema of the committed trajectory
 SCHEMAS = {
+    "BENCH_serve.json": {
+        "bench": str,
+        "quick": bool,
+        "metrics": _SERVE_CASE,
+    },
     "BENCH_sweep.json": {
         "bench": str,
         "quick": bool,

@@ -1,0 +1,126 @@
+"""Serve-layer trajectory: multi-tenant coalesced solves/sec (PR-8 tentpole).
+
+Drives the production :class:`repro.serve.SolveService` with seeded
+4-tenant traffic against an n=1024-class matrix — warmup, then a few
+thousand coalesced solves with a mid-stream background value update —
+and records the service-level acceptance numbers:
+
+* end-to-end **solves/sec** (admission → coalesce → bucketed solve →
+  scatter, ticks included) and raw solve-loop throughput,
+* per-tenant p50/p99 latency and the mean batch solve time that should
+  dominate it,
+* the compile counter split at warmup (``after_warmup`` must be 0),
+* cache hit rate + refactorization count,
+* a seeded sample of responses re-solved solo
+  (``solve_with_ilu(..., use_pallas=False)``) and compared **bitwise** on
+  the exact value version each request was admitted under.
+
+Run via ``python -m benchmarks.run --emit-json BENCH_serve.json`` (which
+spawns this file as a subprocess with a pinned CPU platform), or directly:
+
+    JAX_PLATFORMS=cpu python benchmarks/bench_serve.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+# the throughput configuration: matgen(1024, 0.004) converges in ~4 inner
+# steps, so a right-sized restart (GMRES always runs the full masked
+# restart window per outer iteration) is the solves/sec lever
+N = 1024
+DENSITY = 0.004
+K = 1
+RESTART = 4
+MAXITER = 40
+BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+TENANTS = ("t0", "t1", "t2", "t3")
+BITWISE_SAMPLE = 24
+
+
+def serve_trajectory(n_requests: int = 2000, seed: int = 17) -> dict:
+    from repro.core.matgen import matgen
+    from repro.core.solvers import solve_with_ilu
+    from repro.core.sparse import CSRMatrix
+    from repro.serve import ServeConfig, SolveService, run_traffic
+
+    a = matgen(N, DENSITY, seed=5)
+    svc = SolveService(ServeConfig(buckets=BUCKETS, restart=RESTART,
+                                   maxiter=MAXITER, k=K))
+    svc.register_matrix("m0", a)
+    t0 = time.perf_counter()
+    svc.warmup()
+    warmup_seconds = time.perf_counter() - t0
+
+    updates = {"m0": [(a.data * 1.1).astype(np.float32)]}
+    t0 = time.perf_counter()
+    result = run_traffic(svc, ["m0"], n_requests, seed=seed, tenants=TENANTS,
+                         burst_max=max(BUCKETS), update_prob=0.01,
+                         update_values=updates)
+    wall = time.perf_counter() - t0
+    snap = svc.metrics_snapshot()  # before reference solves (they compile)
+
+    assert len(result.responses) == n_requests
+    assert all(r.ok for r in result.responses)
+
+    # seeded bitwise sample across value versions, buckets, lane positions
+    rng = np.random.default_rng(seed)
+    ref_mats = {1: a}
+    for i, data in enumerate(result.updates["m0"]):
+        ref_mats[2 + i] = CSRMatrix(n=a.n, indptr=a.indptr, indices=a.indices,
+                                    data=data)
+    by_id = {r.request_id: r for r in result.responses}
+    sample = rng.choice(len(result.records), size=BITWISE_SAMPLE, replace=False)
+    bitwise_ok = True
+    for i in sample:
+        rec = result.records[int(i)]
+        resp = by_id[rec.request_id]
+        ref, _ = solve_with_ilu(ref_mats[rec.expected_version], rec.b, k=K,
+                                tol=rec.tol, restart=RESTART, maxiter=MAXITER,
+                                use_pallas=False)
+        bitwise_ok &= bool(np.array_equal(
+            np.asarray(resp.x, np.float32).view(np.int32),
+            np.asarray(ref.x, np.float32).view(np.int32)))
+
+    co, ca, cp = snap["coalescing"], snap["cache"], snap["compiles"]
+    lat = [snap["tenants"][t] for t in TENANTS]
+    return {
+        "n": N,
+        "k": K,
+        "restart": RESTART,
+        "maxiter": MAXITER,
+        "buckets": list(BUCKETS),
+        "tenants": len(TENANTS),
+        "requests": n_requests,
+        "wall_seconds": wall,
+        "solves_per_sec": n_requests / wall,
+        "raw_solve_solves_per_sec": co["solved_lanes"] / co["solve_seconds_total"],
+        "batches": co["batches"],
+        "occupancy_mean": co["occupancy_mean"],
+        "mean_batch_solve_seconds": co["solve_seconds_total"] / co["batches"],
+        "warmup_seconds": warmup_seconds,
+        "compiles_warmup": cp["warmup"],
+        "compiles_after_warmup": cp["after_warmup"],
+        "cache_hit_rate": ca["hit_rate"],
+        "refactorizations": ca["refactorizations"],
+        "p50_seconds": float(np.median([h["p50_seconds"] for h in lat])),
+        "p99_seconds": float(max(h["p99_seconds"] for h in lat)),
+        "per_tenant": [
+            {"tenant": t, "count": snap["tenants"][t]["count"],
+             "p50_seconds": snap["tenants"][t]["p50_seconds"],
+             "p99_seconds": snap["tenants"][t]["p99_seconds"]}
+            for t in TENANTS],
+        "bitwise_equal_solo": bitwise_ok,
+        "bitwise_checked": int(BITWISE_SAMPLE),
+    }
+
+
+if __name__ == "__main__":
+    n_requests = int(sys.argv[1]) if len(sys.argv) > 1 else 2000
+    print(json.dumps(serve_trajectory(n_requests)))

@@ -266,6 +266,42 @@ def bench_inverse(rows, devices=(1, 2, 8)):
     return {"cases": cases, "grid": grid}
 
 
+def bench_serve(rows, quick=True):
+    """Multi-tenant coalesced serving trajectory (PR-8 tentpole).
+
+    One subprocess (pinned CPU platform) running the seeded 4-tenant soak
+    from ``benchmarks/bench_serve.py``: end-to-end solves/sec, per-tenant
+    p50/p99, compile flatness after warmup, and a seeded bitwise sample
+    against solo solves. Selected by an ``--emit-json`` basename
+    containing ``serve``.
+    """
+    import subprocess
+
+    child = os.path.join(os.path.dirname(__file__), "bench_serve.py")
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    n_requests = "2000"
+    out = subprocess.run(
+        [sys.executable, child, n_requests], env=env, capture_output=True,
+        text=True, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"bench_serve failed:\n{out.stderr[-2000:]}")
+    m = json.loads(out.stdout)
+    rows.append(("serve.solves_per_sec", 1e6 / m["solves_per_sec"],
+                 f"solves_per_sec={m['solves_per_sec']:.0f} "
+                 f"(raw={m['raw_solve_solves_per_sec']:.0f}) "
+                 f"occupancy={m['occupancy_mean']:.2f}"))
+    rows.append(("serve.p99_latency", m["p99_seconds"] * 1e6,
+                 f"p50={m['p50_seconds'] * 1e3:.1f}ms "
+                 f"batch_solve={m['mean_batch_solve_seconds'] * 1e3:.1f}ms"))
+    rows.append(("serve.compile_flatness", m["warmup_seconds"] * 1e6,
+                 f"after_warmup={m['compiles_after_warmup']} "
+                 f"refactors={m['refactorizations']} "
+                 f"bitwise={m['bitwise_equal_solo']}"))
+    return m
+
+
 def bench_solver(rows, quick=True):
     """Device-resident preconditioned Krylov engine (PR-1 tentpole)."""
     from benchmarks import bench_ilu as B
@@ -326,10 +362,12 @@ def main() -> None:
     rows = []
     topilu_metrics = None
     base = os.path.basename(emit_json) if emit_json else ""
-    if "topilu" in base or "sweep" in base or "inverse" in base:
-        # distributed trajectories only: spawning 3 jax subprocesses is too
+    if "topilu" in base or "sweep" in base or "inverse" in base or "serve" in base:
+        # subprocess trajectories only: spawning jax subprocesses is too
         # slow to fold into every CSV run
-        if "inverse" in base:
+        if "serve" in base:
+            payload = {"bench": "serve_coalescing", "quick": quick, "metrics": bench_serve(rows)}
+        elif "inverse" in base:
             payload = {"bench": "inverse_chain", "quick": quick, "metrics": bench_inverse(rows)}
         elif "sweep" in base:
             payload = {"bench": "sweep_epoch_fused", "quick": quick, "metrics": bench_sweep(rows)}

@@ -41,17 +41,54 @@ import numpy as np
 from .bitmath import barred, bitdot, bitnorm, masked_lane_sum
 from .planner import COL_SENTINEL
 
+def parse_batch_buckets(spec: str, source: str = "REPRO_BATCH_BUCKETS") -> tuple:
+    """Parse and validate a comma-separated bucket spec.
+
+    Buckets bound the set of compiled batch shapes, so a malformed spec
+    must fail loudly at parse time — a silently-accepted ``0`` or ``-4``
+    would only surface later as a bad pad target deep in a solve. Rules:
+    every token an integer, every value positive, no duplicates, strictly
+    ascending (the canonical form callers and ``bucket_batch`` assume).
+    """
+    toks = [t.strip() for t in str(spec).split(",") if t.strip()]
+    if not toks:
+        raise ValueError(f"{source}: empty bucket spec {spec!r} — expected "
+                         "comma-separated positive integers, e.g. '1,2,4,8'")
+    vals = []
+    for t in toks:
+        try:
+            v = int(t)
+        except ValueError:
+            raise ValueError(
+                f"{source}: bucket token {t!r} is not an integer "
+                f"(full spec: {spec!r})") from None
+        if v <= 0:
+            raise ValueError(
+                f"{source}: bucket sizes must be positive, got {v} "
+                f"(full spec: {spec!r})")
+        vals.append(v)
+    if len(set(vals)) != len(vals):
+        dupes = sorted({v for v in vals if vals.count(v) > 1})
+        raise ValueError(
+            f"{source}: duplicate bucket size(s) {dupes} (full spec: {spec!r})")
+    if vals != sorted(vals):
+        raise ValueError(
+            f"{source}: bucket sizes must be ascending — got {vals}, "
+            f"expected {sorted(vals)} (full spec: {spec!r})")
+    return tuple(vals)
+
+
 def batch_buckets():
     """RHS batch-size buckets for the serving path — ``REPRO_BATCH_BUCKETS``
-    (comma-separated, ascending) or the powers-of-two default. Bucketing
-    keeps the number of compiled solver/precond shapes bounded: a ragged
-    batch pads up to the nearest bucket (vmap lanes are independent, so
-    zero padding never changes a real lane's bits) instead of minting a new
-    executable per batch size."""
+    (comma-separated, positive, ascending) or the powers-of-two default.
+    Bucketing keeps the number of compiled solver/precond shapes bounded: a
+    ragged batch pads up to the nearest bucket (vmap lanes are independent,
+    so zero padding never changes a real lane's bits) instead of minting a
+    new executable per batch size. A malformed spec raises with the
+    offending token — see :func:`parse_batch_buckets`."""
     import os
 
-    spec = os.environ.get("REPRO_BATCH_BUCKETS", "1,2,4,8,16,32,64")
-    return tuple(sorted(int(t) for t in spec.split(",") if t.strip()))
+    return parse_batch_buckets(os.environ.get("REPRO_BATCH_BUCKETS", "1,2,4,8,16,32,64"))
 
 
 def bucket_batch(nb: int, buckets=None) -> int:
@@ -68,6 +105,16 @@ def _pad_rhs_batch(bs, tgt):
         return bs
     pad = jnp.zeros((tgt - bs.shape[0], bs.shape[1]), bs.dtype)
     return jnp.concatenate([bs, pad])
+
+
+def _pad_tols(tol, tgt):
+    """Pad a per-lane tol array to the bucket size. Padding lanes get 1.0 —
+    their RHS is zero, so ``||b|| = 0`` stops them before any iteration
+    regardless of tolerance; 1.0 just keeps the intent obvious."""
+    tol_arr = np.asarray(tol, np.float32)
+    if tol_arr.ndim == 0 or tol_arr.shape[0] == tgt:
+        return tol
+    return np.concatenate([tol_arr, np.ones(tgt - tol_arr.shape[0], np.float32)])
 
 
 def _cached_engine(matvec, M, key, build):
@@ -432,18 +479,39 @@ def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) ->
 
     ``vmap`` of the single-RHS engine: every lane shares the cached
     triangular plan and SpMV arrays; converged lanes freeze (per-lane
-    iteration counts and histories stay exact) while the rest continue."""
+    iteration counts and histories stay exact) while the rest continue.
+
+    ``tol`` may be a scalar or a per-lane ``(batch,)`` array — the serving
+    coalescer batches requests with *different* tolerances into one bucketed
+    solve. Per-lane tolerances ride as a vmapped runtime argument, so one
+    compiled engine serves every tolerance mix (no per-tol executables) and
+    a lane's arithmetic is bitwise identical to the same solve run alone
+    with its scalar tolerance: ``tol`` only feeds ``tol * ||b||`` (computed
+    at runtime either way) and the stopping comparisons — never the
+    iterate arithmetic."""
     M = precond or _identity
     bs = jnp.asarray(bs, jnp.float32)
     if bs.ndim != 2:
         raise ValueError(f"gmres_batched expects (batch, n), got shape {bs.shape}")
-    run = _cached_engine(matvec, M, ("gmres_batched", restart, tol, maxiter), lambda: jax.jit(
-        jax.vmap(functools.partial(_gmres_core, matvec, M, m=restart, tol=tol, maxiter=maxiter))))
-    x, rel, it, tot, hist, bnorm = run(bs)
+    tol_arr = np.asarray(tol, np.float32)
+    if tol_arr.ndim == 0:
+        run = _cached_engine(matvec, M, ("gmres_batched", restart, tol, maxiter), lambda: jax.jit(
+            jax.vmap(functools.partial(_gmres_core, matvec, M, m=restart, tol=tol, maxiter=maxiter))))
+        x, rel, it, tot, hist, bnorm = run(bs)
+        tols = np.full(bs.shape[0], float(tol), np.float32)
+    else:
+        if tol_arr.shape != (bs.shape[0],):
+            raise ValueError(
+                f"gmres_batched: per-lane tol must have shape ({bs.shape[0]},) "
+                f"matching the batch, got {tol_arr.shape}")
+        run = _cached_engine(matvec, M, ("gmres_batched_vtol", restart, maxiter), lambda: jax.jit(
+            jax.vmap(lambda b, t: _gmres_core(matvec, M, b, m=restart, tol=t, maxiter=maxiter))))
+        x, rel, it, tot, hist, bnorm = run(bs, jnp.asarray(tol_arr))
+        tols = tol_arr
     out = []
     for i in range(bs.shape[0]):
         r = float(rel[i])
-        out.append(SolveResult(np.asarray(x[i]), int(tot[i]), r, r <= tol * 1.01,
+        out.append(SolveResult(np.asarray(x[i]), int(tot[i]), r, r <= float(tols[i]) * 1.01,
                                _trim_history(hist[i], int(it[i]), float(bnorm[i]))))
     return out
 
@@ -559,7 +627,8 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
         nb = b.shape[0]
         if bucket:
             b = _pad_rhs_batch(b, bucket_batch(nb))
-        return gmres_batched(matvec, b, precond, tol=tol, **kw)[:nb], fact
+        return gmres_batched(matvec, b, precond,
+                             tol=_pad_tols(tol, b.shape[0]), **kw)[:nb], fact
     if b.ndim != 1:
         raise ValueError(f"solve_sharded expects b of shape (n,) or (batch, n), got {b.shape}")
     fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]

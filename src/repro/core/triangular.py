@@ -186,6 +186,33 @@ def build_triangular_plan(pattern: ILUPattern, vals: np.ndarray) -> TriangularPl
     )
 
 
+def rebind_triangular_values(plan: TriangularPlan, pattern: ILUPattern, vals: np.ndarray):
+    """Recompute a plan's level-major *value* arrays for new factor values
+    on the same structure (the refactorize→serve path).
+
+    The wavefront schedule, the slot maps, and every column/index array are
+    pure structure — only ``l_vals_lm`` / ``u_vals_lm`` / ``u_diag_lm``
+    depend on the numbers. This redoes just the value scatter (vectorized
+    NumPy, no scheduling, no compilation), so a serving cache can rebind a
+    background refactorization onto an already-compiled sweep whose value
+    operands ride as runtime arguments. Returns
+    ``(l_vals_lm, u_vals_lm, u_diag_lm)`` aligned with ``plan``.
+    """
+    n = plan.n
+    l_cols, l_vals, u_cols, u_vals, diag = _split_lu_ell(pattern, vals)
+    if l_cols.shape != plan.l_cols.shape or u_cols.shape != plan.u_cols.shape:
+        raise ValueError(
+            "rebind_triangular_values: pattern structure does not match the "
+            f"plan (L {l_cols.shape} vs {plan.l_cols.shape}, "
+            f"U {u_cols.shape} vs {plan.u_cols.shape})")
+    _, lv = _level_major(plan.l_levels, l_cols, l_vals, n)
+    _, uv = _level_major(plan.u_levels, u_cols, u_vals, n)
+    pad_u = plan.u_levels >= n
+    rows_u = np.minimum(plan.u_levels, max(n - 1, 0))
+    u_diag_lm = np.where(pad_u, 1.0, diag[rows_u]).astype(np.float32)
+    return lv, uv, u_diag_lm
+
+
 class PrecondApply:
     """Cached, device-resident application of M^{-1} = (LU)^{-1}.
 

@@ -1,0 +1,44 @@
+"""Production solve service over the warm bucketed ILU(k) solver stack.
+
+Multi-tenant request coalescing with a bit-compat guarantee: a request
+batched into any coalesced solve returns bits identical to solving it
+alone. See DESIGN.md §11 for the architecture walk-through.
+"""
+from .admission import (
+    AdmissionError,
+    AdmissionQueue,
+    SolveRequest,
+    SolveResponse,
+    validate_request,
+)
+from .cache import CacheEntry, PlanCache
+from .coalescer import CoalescedBatch, coalesce
+from .engine import EngineBinding, LaneResult, ServeEngine, ShardedServeEngine
+from .metrics import CompileWatch, LatencyHistogram, ServiceMetrics, compile_count
+from .service import ServeConfig, SolveService
+from .traffic import TrafficRecord, TrafficResult, run_traffic
+
+__all__ = [
+    "AdmissionError",
+    "AdmissionQueue",
+    "CacheEntry",
+    "CoalescedBatch",
+    "CompileWatch",
+    "EngineBinding",
+    "LaneResult",
+    "LatencyHistogram",
+    "PlanCache",
+    "ServeConfig",
+    "ServeEngine",
+    "ServiceMetrics",
+    "ShardedServeEngine",
+    "SolveRequest",
+    "SolveResponse",
+    "SolveService",
+    "TrafficRecord",
+    "TrafficResult",
+    "coalesce",
+    "compile_count",
+    "run_traffic",
+    "validate_request",
+]

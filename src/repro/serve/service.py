@@ -1,0 +1,207 @@
+"""The solve service: admission → coalesce → bucketed solve → scatter.
+
+:class:`SolveService` wires the serve layer together around a synchronous
+tick loop (the test-harness-friendly shape — a deployment would run
+:meth:`tick` on a dispatcher thread):
+
+* :meth:`submit` validates a request, pins the target matrix's *current*
+  value binding, and enqueues; every malformed input fails that one
+  request with a structured :class:`SolveResponse` — nothing malformed
+  ever reaches a batch.
+* :meth:`tick` drains the queue, coalesces compatible requests across
+  tenants (``coalescer.coalesce``), runs one bucketed multi-RHS solve per
+  batch on the pre-warmed engine, and scatters per-lane results back into
+  per-request responses (per-request convergence from per-lane residual
+  freezing; per-request tolerance rides as a vmapped lane argument).
+* :meth:`warmup` AOT-compiles every resident engine for every bucket and
+  pins the compile baseline — after it returns, a flat
+  ``compiles.after_warmup`` is the service's core SLO invariant.
+
+Bit-compat bar: a response's ``x`` is bitwise identical to solving that
+request alone (`solve_with_ilu` / `solve_sharded` on the same values) —
+regardless of which batch, bucket, or lane position it was coalesced into.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.sparse import CSRMatrix
+
+from .admission import (
+    SOLVE_FAILED,
+    AdmissionError,
+    AdmissionQueue,
+    SolveRequest,
+    SolveResponse,
+    validate_request,
+)
+from .cache import PlanCache
+from .coalescer import coalesce
+from .engine import DEFAULT_MAXITER, DEFAULT_RESTART, ServeEngine, ShardedServeEngine
+from .metrics import ServiceMetrics
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Service-wide knobs (per-matrix overrides ride on ``register_matrix``)."""
+
+    cache_capacity: int = 8
+    max_queue_depth: int = 4096
+    tick_drain: Optional[int] = None      # max requests drained per tick
+    k: int = 1
+    restart: int = DEFAULT_RESTART
+    maxiter: int = DEFAULT_MAXITER
+    precond_method: str = "sweep"
+    use_pallas: bool = True
+    buckets: Optional[Sequence[int]] = None
+    sharded: bool = False                 # ShardedServeEngine over solve_sharded
+    mesh: object = None                   # sharded only
+    band_rows: int = 32                   # sharded only
+
+
+class SolveService:
+    """Multi-tenant front end over the warm bucketed solver stack."""
+
+    def __init__(self, config: Optional[ServeConfig] = None, **kw):
+        self.config = config or ServeConfig(**kw)
+        self.metrics = ServiceMetrics()
+        self.cache = PlanCache(capacity=self.config.cache_capacity,
+                               metrics=self.metrics,
+                               engine_factory=self._make_engine)
+        self.queue = AdmissionQueue(max_depth=self.config.max_queue_depth)
+        self._warmed = False
+
+    # -- engine construction -------------------------------------------------
+    def _make_engine(self, a, pattern, vals_csr, **knobs):
+        cfg = self.config
+        common = dict(restart=cfg.restart, maxiter=cfg.maxiter,
+                      precond_method=cfg.precond_method, buckets=cfg.buckets)
+        common.update(knobs)
+        if cfg.sharded:
+            return ShardedServeEngine(a, pattern, vals_csr, mesh=cfg.mesh,
+                                      band_rows=cfg.band_rows, k=cfg.k, **common)
+        return ServeEngine(a, pattern, vals_csr, use_pallas=cfg.use_pallas, **common)
+
+    # -- tenant-facing surface -----------------------------------------------
+    def register_matrix(self, matrix_id: str, a: CSRMatrix,
+                        k: Optional[int] = None) -> int:
+        """Make a matrix solvable; returns the initial value version."""
+        entry = self.cache.register(matrix_id, a,
+                                    k=self.config.k if k is None else k)
+        return entry.version
+
+    def update_matrix_values(self, matrix_id: str, data: np.ndarray,
+                             background: bool = True):
+        """Push new values (same structure): background refactorization +
+        atomic binding swap; other tenants' solves proceed throughout."""
+        return self.cache.update_values(matrix_id, data, background=background)
+
+    def submit(self, tenant: str, matrix_id: str, b, tol: float = 1e-5):
+        """Admit one request. Returns the pending :class:`SolveRequest`, or a
+        failed :class:`SolveResponse` if any admission check rejects — a
+        malformed request costs its tenant one error, nobody else anything."""
+        try:
+            bv = validate_request(tenant, matrix_id, b, tol,
+                                  self.cache.dim_of(matrix_id))
+            entry, binding = self.cache.acquire(matrix_id)  # the pin
+            req = SolveRequest(tenant=tenant, matrix_id=matrix_id,
+                               b=bv, tol=float(tol), binding=(entry, binding))
+            try:
+                self.queue.push(req)
+            except AdmissionError:
+                self.cache.release(matrix_id)
+                raise
+        except AdmissionError as e:
+            self.metrics.record_admission(False, e.reason)
+            # rejects count under rejected_by_reason, not the latency
+            # histograms — a 0-latency observation would skew every quantile
+            return SolveResponse(
+                request_id=-1, tenant=tenant, matrix_id=matrix_id, ok=False,
+                error=e.detail, error_reason=e.reason)
+        self.metrics.record_admission(True)
+        return req
+
+    # -- the tick loop ---------------------------------------------------------
+    def tick(self) -> List[SolveResponse]:
+        """One dispatch round: drain → coalesce → solve each batch → scatter."""
+        self.metrics.record_tick()
+        self.metrics.record_queue_depth(len(self.queue))
+        reqs = self.queue.drain(self.config.tick_drain)
+        responses: List[SolveResponse] = []
+        for batch in coalesce(reqs):
+            responses.extend(self._run_batch(batch))
+        return responses
+
+    def _run_batch(self, batch) -> List[SolveResponse]:
+        reqs = batch.requests
+        bs = np.stack([r.b for r in reqs])
+        tols = np.asarray([r.tol for r in reqs], np.float32)
+        t0 = time.perf_counter()
+        try:
+            lanes = batch.entry.engine.solve(batch.binding, bs, tols)
+        except Exception as e:  # noqa: BLE001 — a batch failure must not kill the service
+            dt = time.perf_counter() - t0
+            self.metrics.record_batch(batch.matrix_id, 0, batch.bucket, dt)
+            out = []
+            for r in reqs:
+                self.cache.release(r.matrix_id)
+                lat = time.perf_counter() - r.submitted_at
+                self.metrics.record_response(r.tenant, False, lat)
+                out.append(SolveResponse(
+                    request_id=r.request_id, tenant=r.tenant,
+                    matrix_id=r.matrix_id, ok=False, error=str(e),
+                    error_reason=SOLVE_FAILED, latency_seconds=lat,
+                    batch_lanes=batch.bucket,
+                    matrix_version=batch.binding.version))
+            return out
+        dt = time.perf_counter() - t0
+        self.metrics.record_batch(batch.matrix_id, len(reqs), batch.bucket, dt)
+        out = []
+        for r, lane in zip(reqs, lanes):
+            self.cache.release(r.matrix_id)
+            lat = time.perf_counter() - r.submitted_at
+            self.metrics.record_response(r.tenant, True, lat)
+            out.append(SolveResponse(
+                request_id=r.request_id, tenant=r.tenant, matrix_id=r.matrix_id,
+                ok=True, x=lane.x, iterations=lane.iterations,
+                residual=lane.residual, converged=lane.converged,
+                latency_seconds=lat, batch_lanes=batch.bucket,
+                matrix_version=batch.binding.version))
+        return out
+
+    def run_until_idle(self, max_ticks: int = 10_000) -> List[SolveResponse]:
+        """Tick until the queue drains (bounded); returns all responses."""
+        out: List[SolveResponse] = []
+        for _ in range(max_ticks):
+            if not len(self.queue):
+                break
+            out.extend(self.tick())
+        return out
+
+    # -- lifecycle --------------------------------------------------------------
+    def warmup(self, matrix_ids: Optional[Sequence[str]] = None) -> dict:
+        """AOT-compile every (engine, bucket) pair for the given (default:
+        all resident) matrices, then pin the compile baseline: every later
+        ``metrics.compiles.after_warmup`` counts serving-path compiles only.
+        Returns {matrix_id: {bucket: seconds}}."""
+        out = {}
+        for mid in (matrix_ids if matrix_ids is not None else self.cache.resident_ids()):
+            e = self.cache.entry(mid)
+            if e is not None:
+                out[mid] = e.engine.warm(e.binding)
+        self.metrics.mark_warm()
+        self._warmed = True
+        return out
+
+    def drain(self, timeout: Optional[float] = None) -> List[SolveResponse]:
+        """Graceful stop: finish queued work, join refactor workers."""
+        out = self.run_until_idle()
+        self.cache.wait_refactors(timeout)
+        return out
+
+    def metrics_snapshot(self) -> dict:
+        return self.metrics.snapshot()

@@ -26,6 +26,11 @@ def pytest_configure(config):
         "lowering; skipped unless REPRO_PALLAS_INTERPRET=0 (TPU hardware) "
         "or REPRO_PALLAS_FORCE_INTERPRET=1 (CI interpret leg).",
     )
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (soaks, end-to-end sweeps); always in "
+        "tier-1, deselectable with -m 'not slow' for quick local loops.",
+    )
 
 
 def pytest_collection_modifyitems(config, items):
