@@ -174,6 +174,41 @@ _SERVE_CASE = {
     }],
     "bitwise_equal_solo": bool,
     "bitwise_checked": int,
+    # PR 9: breakdown-hardened serving — fault-injection counters plus the
+    # scaled-down sharded soak on 2/4 virtual devices
+    "robustness": {
+        "n": int,
+        "requests_ok": int,
+        "requests_failed": int,
+        "degraded_ok": bool,
+        "healthy_unaffected": bool,
+        "counters": {
+            "broken_factorizations": int,
+            "shifted_bindings": int,
+            "degraded_responses": int,
+            "breakdown_lanes": int,
+            "shift_retries": int,
+            "retry_recoveries": int,
+            "deadline_expired": int,
+            "quarantined_batches": int,
+            "identity_fallbacks": int,
+            "rejected_updates": int,
+        },
+    },
+    "sharded": [{
+        "devices": int,
+        "n": int,
+        "band_rows": int,
+        "requests": int,
+        "wall_seconds": NUM,
+        "solves_per_sec": NUM,
+        "batches": int,
+        "occupancy_mean": NUM,
+        "warmup_seconds": NUM,
+        "compiles_after_warmup": int,
+        "bitwise_equal_solo": bool,
+        "bitwise_checked": int,
+    }],
 }
 
 #: filename -> schema of the committed trajectory

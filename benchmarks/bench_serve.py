@@ -15,6 +15,18 @@ and records the service-level acceptance numbers:
   (``solve_with_ilu(..., use_pallas=False)``) and compared **bitwise** on
   the exact value version each request was admitted under.
 
+PR 9 adds two axes:
+
+* ``robustness`` — a deterministic fault-injection segment (breakdown
+  matrix registered under ``on_breakdown="shift"``, an expired deadline,
+  a lane that goes non-finite mid-flight) recording the degradation
+  counters (``shifted_bindings``, ``breakdown_lanes``, ``shift_retries``,
+  ``deadline_expired``, ...) and that healthy traffic is unharmed.
+* ``sharded`` — a scaled-down soak against :class:`ShardedServeEngine`
+  on 2 and 4 virtual devices (one subprocess each — the host device
+  count locks at first JAX init), with the same compile-flatness and
+  bitwise-vs-solo bars.
+
 Run via ``python -m benchmarks.run --emit-json BENCH_serve.json`` (which
 spawns this file as a subprocess with a pinned CPU platform), or directly:
 
@@ -121,6 +133,162 @@ def serve_trajectory(n_requests: int = 2000, seed: int = 17) -> dict:
     }
 
 
+#: counters every trajectory reports (0 when the fault never fired) so the
+#: BENCH_serve.json schema can pin the robustness section shape
+ROBUST_COUNTERS = ("broken_factorizations", "shifted_bindings",
+                   "degraded_responses", "breakdown_lanes", "shift_retries",
+                   "retry_recoveries", "deadline_expired",
+                   "quarantined_batches", "identity_fallbacks",
+                   "rejected_updates")
+
+
+def robustness_trajectory(seed: int = 23) -> dict:
+    """Deterministic fault-injection segment: every injected breakdown is
+    absorbed by the degradation ladder, healthy traffic is untouched."""
+    from repro.core.matgen import matgen, zero_diagonal_matrix
+    from repro.serve import ServeConfig, SolveService
+
+    n = 48
+    rng = np.random.default_rng(seed)
+    good = matgen(n, density=0.12, seed=7)
+    fragile = zero_diagonal_matrix(n, 0.12, seed=4, row=0)  # zero pivot
+    svc = SolveService(ServeConfig(buckets=(1, 2, 4), restart=8, k=K,
+                                   on_breakdown="shift"))
+    svc.register_matrix("good", good)
+    svc.register_matrix("fragile", fragile)  # ladder shifts at register
+    svc.warmup()
+
+    def rhs():
+        return rng.standard_normal(n).astype(np.float32)
+
+    reqs = []
+    for _ in range(6):
+        reqs.append(("good", svc.submit("t0", "good", rhs())))
+        reqs.append(("fragile", svc.submit("t1", "fragile", rhs())))
+    svc.run_until_idle()
+
+    # an already-expired deadline: swept before it can occupy a lane
+    late = svc.submit("t0", "good", rhs(), deadline_seconds=1e-4)
+    time.sleep(0.005)
+    # a lane that goes non-finite mid-flight (post-admission poke — the
+    # admission gate itself rejects non-finite b): fails alone, the
+    # co-batched healthy lanes are unharmed
+    poisoned = svc.submit("t0", "good", rhs())
+    poisoned.b = np.full(n, np.nan, np.float32)
+    survivors = [svc.submit("t1", "good", rhs()) for _ in range(2)]
+    svc.run_until_idle()
+
+    snap = svc.metrics_snapshot()
+
+    def resp(r):
+        return r.result(timeout=60)
+
+    degraded_ok = all(resp(r).ok and resp(r).degraded and resp(r).shift > 0
+                      for mid, r in reqs if mid == "fragile")
+    healthy = [resp(r) for mid, r in reqs if mid == "good"]
+    healthy += [resp(r) for r in survivors]
+    late_resp, poisoned_resp = resp(late), resp(poisoned)
+    assert not late_resp.ok and late_resp.error_reason == "deadline_exceeded"
+    assert not poisoned_resp.ok and poisoned_resp.verdict == "breakdown"
+    return {
+        "n": n,
+        "requests_ok": int(sum(r.ok for r in healthy)
+                           + sum(resp(r).ok for mid, r in reqs
+                                 if mid == "fragile")),
+        "requests_failed": 2,  # the expired deadline + the poisoned lane
+        "degraded_ok": bool(degraded_ok),
+        "healthy_unaffected": bool(all(r.ok and not r.degraded
+                                       for r in healthy)),
+        "counters": {k: int(snap["robustness"].get(k, 0))
+                     for k in ROBUST_COUNTERS},
+    }
+
+
+def sharded_trajectory(n: int = 256, n_requests: int = 60,
+                       seed: int = 33) -> dict:
+    """Scaled-down sharded serve soak on however many devices this process
+    sees (run under ``XLA_FLAGS=--xla_force_host_platform_device_count=D``)."""
+    import jax
+
+    from repro.core.matgen import matgen
+    from repro.core.solvers import solve_sharded
+    from repro.serve import ServeConfig, SolveService, run_traffic
+
+    band_rows = 32
+    a = matgen(n, density=min(0.02, 12.0 / n), seed=21)
+    svc = SolveService(ServeConfig(sharded=True, band_rows=band_rows,
+                                   buckets=(1, 2, 4), k=K, restart=8,
+                                   maxiter=20))
+    svc.register_matrix("m0", a)
+    t0 = time.perf_counter()
+    svc.warmup()
+    warmup_seconds = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    result = run_traffic(svc, ["m0"], n_requests, seed=seed,
+                         tenants=("t0", "t1"), burst_max=4,
+                         tol_choices=(1e-4, 1e-5))
+    wall = time.perf_counter() - t0
+    snap = svc.metrics_snapshot()  # before reference solves (they compile)
+    assert all(r.ok for r in result.responses)
+
+    rng = np.random.default_rng(seed)
+    by_id = {r.request_id: r for r in result.responses}
+    k_sample = min(12, len(result.records))
+    sample = rng.choice(len(result.records), size=k_sample, replace=False)
+    bitwise_ok, fact = True, None
+    for i in sample:
+        rec = result.records[int(i)]
+        ref, fact = solve_sharded(a, rec.b, k=K, band_rows=band_rows,
+                                  tol=rec.tol, restart=8, maxiter=20,
+                                  fact=fact)
+        bitwise_ok &= bool(np.array_equal(
+            np.asarray(by_id[rec.request_id].x, np.float32).view(np.int32),
+            np.asarray(ref.x, np.float32).view(np.int32)))
+
+    co, cp = snap["coalescing"], snap["compiles"]
+    return {
+        "devices": len(jax.devices()),
+        "n": n,
+        "band_rows": band_rows,
+        "requests": n_requests,
+        "wall_seconds": wall,
+        "solves_per_sec": n_requests / wall,
+        "batches": co["batches"],
+        "occupancy_mean": co["occupancy_mean"],
+        "warmup_seconds": warmup_seconds,
+        "compiles_after_warmup": cp["after_warmup"],
+        "bitwise_equal_solo": bitwise_ok,
+        "bitwise_checked": int(k_sample),
+    }
+
+
+def _sharded_case(devices: int, n: int = 256, n_requests: int = 60) -> dict:
+    """One subprocess per device count: the host device count locks at
+    first JAX init, and this parent already initialized jax."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded",
+         str(n), str(n_requests)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded serve bench D={devices} failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout)
+
+
 if __name__ == "__main__":
+    if "--sharded" in sys.argv:
+        i = sys.argv.index("--sharded")
+        print(json.dumps(sharded_trajectory(int(sys.argv[i + 1]),
+                                            int(sys.argv[i + 2]))))
+        sys.exit(0)
     n_requests = int(sys.argv[1]) if len(sys.argv) > 1 else 2000
-    print(json.dumps(serve_trajectory(n_requests)))
+    metrics = serve_trajectory(n_requests)
+    metrics["robustness"] = robustness_trajectory()
+    metrics["sharded"] = [_sharded_case(d) for d in (2, 4)]
+    print(json.dumps(metrics))

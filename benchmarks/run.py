@@ -299,6 +299,19 @@ def bench_serve(rows, quick=True):
                  f"after_warmup={m['compiles_after_warmup']} "
                  f"refactors={m['refactorizations']} "
                  f"bitwise={m['bitwise_equal_solo']}"))
+    rb = m["robustness"]
+    rows.append(("serve.robustness", rb["requests_failed"],
+                 f"degraded_ok={rb['degraded_ok']} "
+                 f"healthy_unaffected={rb['healthy_unaffected']} "
+                 f"shifted_bindings={rb['counters']['shifted_bindings']} "
+                 f"breakdown_lanes={rb['counters']['breakdown_lanes']} "
+                 f"deadline_expired={rb['counters']['deadline_expired']}"))
+    for c in m["sharded"]:
+        rows.append((f"serve.sharded_d{c['devices']}",
+                     1e6 / c["solves_per_sec"],
+                     f"solves_per_sec={c['solves_per_sec']:.0f} "
+                     f"after_warmup={c['compiles_after_warmup']} "
+                     f"bitwise={c['bitwise_equal_solo']}"))
     return m
 
 

@@ -88,6 +88,11 @@ class ILUFactorization:
     # (the level-truncated incomplete-inverse SpMV chain, DESIGN.md §Inverse),
     # or "auto" (cost-modeled; single-device resolves to sweep)
     precond_method: str = "sweep"
+    # pivot-guard audit of this factor (core.guard.FactorHealth). None only
+    # when the guard was bypassed; ``health.shift`` > 0 means ``a``/``vals``
+    # describe the diagonally shifted system the ladder settled on, and
+    # ``health.degraded`` routes ``precond()`` to the identity fallback.
+    health: Optional["FactorHealth"] = None
     # lazily built apply engines, keyed by (method, use_pallas) — the plan
     # + compiled apply are built once and reused across every
     # solve/restart/RHS batch against this factorization
@@ -101,6 +106,13 @@ class ILUFactorization:
         sweep method, ``InversePrecondApply`` for the inverse chain.
         ``method`` defaults to the factorization's ``precond_method``."""
         from .inverse import resolve_precond_method
+
+        if self.health is not None and self.health.degraded:
+            # last rung of the fallback chain: sweeping a broken factor
+            # would inject NaN into every iterate, so M^{-1} = I
+            from .guard import IdentityPrecondApply
+
+            return self._preconds.setdefault("identity", IdentityPrecondApply())
 
         method = resolve_precond_method(
             method if method is not None else self.precond_method,
@@ -170,6 +182,10 @@ def ilu_sharded(
     broadcast: str = "psum",
     ordering=None,
     precond_method: str = "sweep",
+    on_breakdown: str = "raise",
+    pivot_tol: Optional[float] = None,
+    shift0: Optional[float] = None,
+    max_shifts: Optional[int] = None,
 ):
     """Distributed factorization whose output **stays sharded on the mesh**
     (``repro.core.top_ilu.ShardedILUFactorization``): each device holds only
@@ -180,7 +196,16 @@ def ilu_sharded(
     once at plan time (``"fusion"`` targets this mesh's band ownership, so
     sweep epochs fuse — see ``repro.core.ordering``); the sharded factors
     then equal sequential ILU(k) of the permuted matrix bitwise, and
-    ``solve`` un/permutes at the boundary."""
+    ``solve`` un/permutes at the boundary.
+
+    ``on_breakdown`` selects the pivot-guard policy (``core.guard``): every
+    factorization is audited on-device (a pure read — guarded factors are
+    bitwise identical to unguarded ones); on a breakdown the shift ladder
+    refactors ``A + α·diag(‖row‖₁)`` through the *same* cached engines (the
+    shifted matrix shares A's structure, so a rung is a value re-scatter,
+    not a compile), and each shifted factor is bitwise-anchored to the
+    sequential oracle of the shifted matrix."""
+    from .guard import audit_sharded, run_ladder
     from .top_ilu import band_mesh, topilu_factor_sharded
 
     mesh = band_mesh(mesh)
@@ -188,12 +213,21 @@ def ilu_sharded(
     t0 = time.perf_counter()
     pattern = _symbolic(a, k, rule)
     t1 = time.perf_counter()
-    fact = topilu_factor_sharded(a, pattern, band_rows=band_rows, mesh=mesh, broadcast=broadcast)
-    fact.loc_vals.block_until_ready()
+
+    def factor(mat):
+        f = topilu_factor_sharded(mat, pattern, band_rows=band_rows,
+                                  mesh=mesh, broadcast=broadcast)
+        f.loc_vals.block_until_ready()
+        return f
+
+    _sysmat, fact, health = run_ladder(
+        a, factor, lambda f: audit_sharded(f, pivot_tol), on_breakdown,
+        shift0=shift0, max_shifts=max_shifts)
     fact.symbolic_seconds = t1 - t0
     fact.numeric_seconds = time.perf_counter() - t1
     fact.ordering = ord_
     fact.precond_method = precond_method
+    fact.health = health
     return fact
 
 
@@ -207,7 +241,18 @@ def ilu(
     broadcast: str = "psum",
     ordering=None,
     precond_method: str = "sweep",
+    on_breakdown: str = "raise",
+    pivot_tol: Optional[float] = None,
+    shift0: Optional[float] = None,
+    max_shifts: Optional[int] = None,
 ) -> ILUFactorization:
+    """``on_breakdown`` (``"raise"|"shift"|"fallback"|"ignore"``) is the
+    pivot-guard policy — see ``core.guard`` and :func:`ilu_sharded`. The
+    audit is a pure read of the finished factor, so a healthy factorization
+    is bitwise unaffected by the guard; when the ladder engages, the
+    returned factorization's ``a``/``vals`` describe the *shifted* system
+    (``health.shift`` records α) and stay bitwise-anchored to the shifted
+    matrix's sequential oracle."""
     if backend == "topilu":
         from .top_ilu import band_mesh
 
@@ -220,24 +265,36 @@ def ilu(
     pattern = _symbolic(a, k, rule)
     t1 = time.perf_counter()
 
-    if backend == "oracle":
-        vals = numeric_ilu_ref(a, pattern)
-    elif backend == "jax":
-        from .factor_plan import factor_plan_for
+    # one numeric closure per backend: the ladder refactors shifted matrices
+    # through it, and because the shifted matrix shares a's structure caches
+    # (FactorPlan / TOP-ILU engine stores ride along by reference in
+    # guard.shifted_matrix) a ladder rung re-executes without re-planning
+    def numeric(mat):
+        if backend == "oracle":
+            return np.asarray(numeric_ilu_ref(mat, pattern), np.float32)
+        if backend == "jax":
+            from .factor_plan import factor_plan_for
 
-        # plan + compiled engine are memoized on the matrix (FactorPlan);
-        # repeated/updated-value factorizations skip planning and compile
-        plan = factor_plan_for(a, pattern)
-        vals = plan.factorize(a)
-    elif backend == "topilu":
-        from .top_ilu import topilu_numeric
+            # plan + compiled engine are memoized on the matrix (FactorPlan);
+            # repeated/updated-value factorizations skip planning and compile
+            return np.asarray(factor_plan_for(mat, pattern).factorize(mat),
+                              np.float32)
+        if backend == "topilu":
+            from .top_ilu import topilu_numeric
 
-        vals = topilu_numeric(a, pattern, band_rows=band_rows, mesh=mesh, broadcast=broadcast)
-    else:
+            return np.asarray(
+                topilu_numeric(mat, pattern, band_rows=band_rows, mesh=mesh,
+                               broadcast=broadcast), np.float32)
         raise ValueError(f"unknown backend {backend!r}")
+
+    from .guard import audit_values, run_ladder
+
+    sysmat, vals, health = run_ladder(
+        a, numeric, lambda v: audit_values(pattern, v, pivot_tol),
+        on_breakdown, shift0=shift0, max_shifts=max_shifts)
     t2 = time.perf_counter()
     return ILUFactorization(
-        a=a, k=k, pattern=pattern, vals=np.asarray(vals, dtype=np.float32),
+        a=sysmat, k=k, pattern=pattern, vals=vals,
         symbolic_seconds=t1 - t0, numeric_seconds=t2 - t1, ordering=ord_,
-        precond_method=precond_method,
+        precond_method=precond_method, health=health,
     )

@@ -133,6 +133,45 @@ def _cached_engine(matvec, M, key, build):
     return fn
 
 
+# Termination verdict codes carried through the solver while-loops as an
+# int32 lane state (0 = still running). Classification rides *outside* the
+# iterate arithmetic — adding it changes no bits of x — and replaces the
+# bare `(res > tolb) & (it < maxiter)` predicates so the serve layer can
+# tell "hit the iteration budget" from "went NaN" from "flatlined".
+VERDICT_RUNNING = 0
+VERDICT_CONVERGED = 1
+VERDICT_MAXITER = 2
+VERDICT_STAGNATED = 3
+VERDICT_BREAKDOWN = 4
+VERDICT_DIVERGED = 5
+VERDICTS = ("running", "converged", "maxiter", "stagnated", "breakdown", "diverged")
+
+# stagnation = relative residual improvement below ε for `window`
+# consecutive steps; divergence = residual blowing past `factor`·‖b‖.
+# GMRES steps are whole restarts (few, substantial), so its window is short;
+# CG/BiCGSTAB steps are single iterations with noisy residuals, so theirs is
+# wide and the divergence bar higher (BiCGSTAB residuals legitimately spike).
+_STAG_EPS = 1e-3
+_GMRES_STALL_WINDOW = 5
+_GMRES_DIV_FACTOR = 1e5
+_KRYLOV_STALL_WINDOW = 25
+_KRYLOV_DIV_FACTOR = 1e8
+
+
+@dataclasses.dataclass
+class SolveReport:
+    """Per-lane termination report (the serve layer's retry policy keys on
+    ``verdict``; ``shift``/``degraded`` are filled in by the solve entry
+    points when the factorization came out of the breakdown ladder)."""
+
+    verdict: str
+    iterations: int
+    residual: float
+    converged: bool
+    degraded: bool = False  # identity-precond fallback was active
+    shift: float = 0.0      # diagonal shift α of the preconditioner's matrix
+
+
 @dataclasses.dataclass
 class SolveResult:
     x: np.ndarray
@@ -140,6 +179,13 @@ class SolveResult:
     residual: float
     converged: bool
     history: np.ndarray  # residual norm per iteration (GMRES: per restart)
+    verdict: str = ""
+    report: SolveReport = None
+
+    def __post_init__(self):
+        if self.report is None:
+            self.report = SolveReport(self.verdict, self.iterations,
+                                      self.residual, self.converged)
 
 
 def make_ell_matvec(cols: jnp.ndarray, vals: jnp.ndarray, n: int) -> Callable:
@@ -230,6 +276,18 @@ def _identity(x):
     return x
 
 
+def _annotate_reports(res, fact):
+    """Copy the factorization's ladder outcome (shift α, degraded flag) onto
+    each lane's SolveReport — the serve layer reads these off the response
+    instead of re-deriving them from the cache entry."""
+    health = getattr(fact, "health", None)
+    if health is not None and (health.shift != 0.0 or health.degraded):
+        for r in res if isinstance(res, list) else (res,):
+            r.report.shift = health.shift
+            r.report.degraded = health.degraded
+    return res
+
+
 def _unpermute_results(res, ordering):
     """Map solve output(s) back to original row order — ``x`` is the only
     row-indexed field of a :class:`SolveResult` (pure gather, bitwise-
@@ -246,11 +304,39 @@ def _trim_history(hist: np.ndarray, it: int, bnorm: float) -> np.ndarray:
 # --------------------------------------------------------------------------
 # CG (SPD systems — e.g. the Poisson benchmark)
 # --------------------------------------------------------------------------
+def _init_verdict(bnorm, tolb):
+    """Lane verdict before the first iteration: a non-finite ‖b‖ is a
+    breakdown on arrival (the quarantine trigger for poisoned requests); a
+    ‖b‖ already within tolerance — notably the zero-RHS padding lanes of a
+    bucketed batch — is converged at 0 iterations, exactly as the old
+    ``res > tolb`` predicates behaved."""
+    return jnp.where(
+        ~jnp.isfinite(bnorm), jnp.int32(VERDICT_BREAKDOWN),
+        jnp.where(bnorm <= tolb, jnp.int32(VERDICT_CONVERGED),
+                  jnp.int32(VERDICT_RUNNING)))
+
+
+def _classify(it, rnorm, stall, bnorm, tolb, window, div_factor, maxiter):
+    """Post-step verdict. Later writes win, so the priority (low→high) is
+    maxiter < stagnated < diverged < converged < breakdown: a lane that is
+    simultaneously at its budget and within tolerance is converged, and a
+    non-finite residual is a breakdown no matter what else holds."""
+    v = jnp.where(it >= maxiter, jnp.int32(VERDICT_MAXITER),
+                  jnp.int32(VERDICT_RUNNING))
+    v = jnp.where(stall >= window, jnp.int32(VERDICT_STAGNATED), v)
+    v = jnp.where(rnorm > div_factor * jnp.maximum(bnorm, 1e-30),
+                  jnp.int32(VERDICT_DIVERGED), v)
+    v = jnp.where(rnorm <= tolb, jnp.int32(VERDICT_CONVERGED), v)
+    v = jnp.where(~jnp.isfinite(rnorm), jnp.int32(VERDICT_BREAKDOWN), v)
+    return v
+
+
 def _cg_core(matvec, M, b, tol, maxiter):
     bnorm = jnp.linalg.norm(b)
+    tolb = tol * bnorm
 
     def body(carry):
-        x, r, z, p, rz, it, _, hist = carry
+        x, r, z, p, rz, it, _, hist, _v, stall, best = carry
         ap = matvec(p)
         alpha = rz / jnp.vdot(p, ap)
         x = x + alpha * p
@@ -260,19 +346,23 @@ def _cg_core(matvec, M, b, tol, maxiter):
         p = z + (rz_new / rz) * p
         rnorm = jnp.linalg.norm(r)
         hist = hist.at[it].set(rnorm)
-        return x, r, z, p, rz_new, it + 1, rnorm, hist
+        stall = jnp.where(rnorm < (1.0 - _STAG_EPS) * best, jnp.int32(0), stall + 1)
+        best = jnp.minimum(best, rnorm)
+        verdict = _classify(it + 1, rnorm, stall, bnorm, tolb,
+                            _KRYLOV_STALL_WINDOW, _KRYLOV_DIV_FACTOR, maxiter)
+        return x, r, z, p, rz_new, it + 1, rnorm, hist, verdict, stall, best
 
     def cond(carry):
-        *_, it, rnorm, _h = carry
-        return (rnorm > tol * bnorm) & (it < maxiter)
+        return carry[8] == VERDICT_RUNNING
 
     x0 = jnp.zeros_like(b)
     r0 = b
     z0 = M(r0)
     carry = (x0, r0, z0, z0, jnp.vdot(r0, z0), jnp.int32(0),
-             jnp.linalg.norm(r0), jnp.zeros(maxiter, jnp.float32))
-    x, r, *_, it, rnorm, hist = jax.lax.while_loop(cond, body, carry)
-    return x, it, rnorm, bnorm, hist
+             jnp.linalg.norm(r0), jnp.zeros(maxiter, jnp.float32),
+             _init_verdict(bnorm, tolb), jnp.int32(0), bnorm)
+    x, r, *_, it, rnorm, hist, verdict, _s, _b = jax.lax.while_loop(cond, body, carry)
+    return x, it, rnorm, bnorm, hist, verdict
 
 
 def cg(matvec, b, precond=None, tol=1e-5, maxiter=500):
@@ -280,10 +370,11 @@ def cg(matvec, b, precond=None, tol=1e-5, maxiter=500):
     b = jnp.asarray(b, jnp.float32)
     run = _cached_engine(matvec, M, ("cg", tol, maxiter), lambda: jax.jit(
         functools.partial(_cg_core, matvec, M, tol=tol, maxiter=maxiter)))
-    x, it, rnorm, bnorm, hist = run(b)
+    x, it, rnorm, bnorm, hist, verdict = run(b)
     rel = float(rnorm) / max(float(bnorm), 1e-30)
     return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01,
-                       _trim_history(hist, int(it), float(bnorm)))
+                       _trim_history(hist, int(it), float(bnorm)),
+                       verdict=VERDICTS[int(verdict)])
 
 
 # --------------------------------------------------------------------------
@@ -291,9 +382,10 @@ def cg(matvec, b, precond=None, tol=1e-5, maxiter=500):
 # --------------------------------------------------------------------------
 def _bicgstab_core(matvec, M, b, tol, maxiter):
     bnorm = jnp.linalg.norm(b)
+    tolb = tol * bnorm
 
     def body(carry):
-        x, r, rhat, p, v, rho, alpha, omega, it, _, hist = carry
+        x, r, rhat, p, v, rho, alpha, omega, it, _, hist, _vd, stall, best = carry
         rho_new = jnp.vdot(rhat, r)
         beta = (rho_new / rho) * (alpha / omega)
         p = r + beta * (p - omega * v)
@@ -308,11 +400,18 @@ def _bicgstab_core(matvec, M, b, tol, maxiter):
         r = s - omega * t
         rnorm = jnp.linalg.norm(r)
         hist = hist.at[it].set(rnorm)
-        return x, r, rhat, p, v, rho_new, alpha, omega, it + 1, rnorm, hist
+        # a ρ/ω collapse (the classic BiCGSTAB breakdown) surfaces as a
+        # non-finite rnorm one step later and classifies as BREAKDOWN —
+        # strictly more informative than the old bare `isfinite` cut-out
+        stall = jnp.where(rnorm < (1.0 - _STAG_EPS) * best, jnp.int32(0), stall + 1)
+        best = jnp.minimum(best, rnorm)
+        verdict = _classify(it + 1, rnorm, stall, bnorm, tolb,
+                            _KRYLOV_STALL_WINDOW, _KRYLOV_DIV_FACTOR, maxiter)
+        return (x, r, rhat, p, v, rho_new, alpha, omega, it + 1, rnorm, hist,
+                verdict, stall, best)
 
     def cond(carry):
-        *_, it, rnorm, _h = carry
-        return (rnorm > tol * bnorm) & (it < maxiter) & jnp.isfinite(rnorm)
+        return carry[11] == VERDICT_RUNNING
 
     x0 = jnp.zeros_like(b)
     r0 = b
@@ -320,10 +419,11 @@ def _bicgstab_core(matvec, M, b, tol, maxiter):
         x0, r0, r0, jnp.zeros_like(b), jnp.zeros_like(b),
         jnp.float32(1), jnp.float32(1), jnp.float32(1), jnp.int32(0),
         jnp.linalg.norm(r0), jnp.zeros(maxiter, jnp.float32),
+        _init_verdict(bnorm, tolb), jnp.int32(0), bnorm,
     )
     out = jax.lax.while_loop(cond, body, carry)
-    x, *_, it, rnorm, hist = out
-    return x, it, rnorm, bnorm, hist
+    x, *_, it, rnorm, hist, verdict, _s, _b = out
+    return x, it, rnorm, bnorm, hist, verdict
 
 
 def bicgstab(matvec, b, precond=None, tol=1e-5, maxiter=500):
@@ -331,10 +431,11 @@ def bicgstab(matvec, b, precond=None, tol=1e-5, maxiter=500):
     b = jnp.asarray(b, jnp.float32)
     run = _cached_engine(matvec, M, ("bicgstab", tol, maxiter), lambda: jax.jit(
         functools.partial(_bicgstab_core, matvec, M, tol=tol, maxiter=maxiter)))
-    x, it, rnorm, bnorm, hist = run(b)
+    x, it, rnorm, bnorm, hist, verdict = run(b)
     rel = float(rnorm) / max(float(bnorm), 1e-30)
     return SolveResult(np.asarray(x), int(it), rel, rel <= tol * 1.01,
-                       _trim_history(hist, int(it), float(bnorm)))
+                       _trim_history(hist, int(it), float(bnorm)),
+                       verdict=VERDICTS[int(verdict)])
 
 
 # --------------------------------------------------------------------------
@@ -437,23 +538,33 @@ def _gmres_core(matvec, M, b, m, tol, maxiter):
         return x0 + M(u), cnt
 
     def outer_cond(carry):
-        _x, _r, it, res, _hist, _tot = carry
-        return (res > tolb) & (it < maxiter)
+        return carry[6] == VERDICT_RUNNING
 
     def outer_body(carry):
-        x, r, it, res, hist, tot = carry
-        active = (res > tolb) & (it < maxiter)  # freezes converged vmap lanes
+        x, r, it, res, hist, tot, verdict, stall = carry
+        active = verdict == VERDICT_RUNNING  # freezes terminated vmap lanes
         x2, cnt = inner(x, r, res)
         r2 = b - matvec(x2)
         rtrue = bitnorm(r2)
-        new = (x2, r2, it + 1, rtrue, hist.at[it].set(rtrue), tot + cnt)
+        # verdict/stall ride outside the iterate arithmetic: x2/r2/rtrue are
+        # computed exactly as before, so classification changes no bits
+        stall2 = jnp.where(rtrue < (1.0 - _STAG_EPS) * res, jnp.int32(0), stall + 1)
+        v2 = _classify(it + 1, rtrue, stall2, bnorm, tolb,
+                       _GMRES_STALL_WINDOW, _GMRES_DIV_FACTOR, maxiter)
+        new = (x2, r2, it + 1, rtrue, hist.at[it].set(rtrue), tot + cnt, v2, stall2)
         return jax.tree_util.tree_map(lambda nw, old: jnp.where(active, nw, old), new, carry)
 
     init = (jnp.zeros_like(b), b, jnp.int32(0), bnorm,
-            jnp.zeros(maxiter, jnp.float32), jnp.int32(0))
-    x, _r, it, res, hist, tot = jax.lax.while_loop(outer_cond, outer_body, init)
-    rel = jnp.where(bnorm > 0, res / jnp.maximum(bnorm, 1e-30), 0.0)
-    return x, rel, it, tot, hist, bnorm
+            jnp.zeros(maxiter, jnp.float32), jnp.int32(0),
+            _init_verdict(bnorm, tolb), jnp.int32(0))
+    x, _r, it, res, hist, tot, verdict, _stall = jax.lax.while_loop(
+        outer_cond, outer_body, init)
+    # non-finite ‖b‖ must surface as a non-finite relative residual: with a
+    # bare `bnorm > 0` a NaN b takes the 0.0 branch and the lane would
+    # report converged — the exact poison the breakdown verdict exists for
+    rel = jnp.where(bnorm > 0, res / jnp.maximum(bnorm, 1e-30),
+                    jnp.where(jnp.isfinite(bnorm), 0.0, jnp.nan))
+    return x, rel, it, tot, hist, bnorm, verdict
 
 
 def gmres(matvec, b, precond=None, restart=30, tol=1e-5, maxiter=20):
@@ -468,10 +579,11 @@ def gmres(matvec, b, precond=None, restart=30, tol=1e-5, maxiter=20):
     b = jnp.asarray(b, jnp.float32)
     run = _cached_engine(matvec, M, ("gmres", restart, tol, maxiter), lambda: jax.jit(
         functools.partial(_gmres_core, matvec, M, m=restart, tol=tol, maxiter=maxiter)))
-    x, rel, it, tot, hist, bnorm = run(b)
+    x, rel, it, tot, hist, bnorm, verdict = run(b)
     rel = float(rel)
     return SolveResult(np.asarray(x), int(tot), rel, rel <= tol * 1.01,
-                       _trim_history(hist, int(it), float(bnorm)))
+                       _trim_history(hist, int(it), float(bnorm)),
+                       verdict=VERDICTS[int(verdict)])
 
 
 def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) -> List[SolveResult]:
@@ -496,8 +608,9 @@ def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) ->
     tol_arr = np.asarray(tol, np.float32)
     if tol_arr.ndim == 0:
         run = _cached_engine(matvec, M, ("gmres_batched", restart, tol, maxiter), lambda: jax.jit(
-            jax.vmap(functools.partial(_gmres_core, matvec, M, m=restart, tol=tol, maxiter=maxiter))))
-        x, rel, it, tot, hist, bnorm = run(bs)
+            jax.vmap(functools.partial(_gmres_core, matvec, M, m=restart, tol=tol,
+                                       maxiter=maxiter))))
+        x, rel, it, tot, hist, bnorm, verdict = run(bs)
         tols = np.full(bs.shape[0], float(tol), np.float32)
     else:
         if tol_arr.shape != (bs.shape[0],):
@@ -506,19 +619,22 @@ def gmres_batched(matvec, bs, precond=None, restart=30, tol=1e-5, maxiter=20) ->
                 f"matching the batch, got {tol_arr.shape}")
         run = _cached_engine(matvec, M, ("gmres_batched_vtol", restart, maxiter), lambda: jax.jit(
             jax.vmap(lambda b, t: _gmres_core(matvec, M, b, m=restart, tol=t, maxiter=maxiter))))
-        x, rel, it, tot, hist, bnorm = run(bs, jnp.asarray(tol_arr))
+        x, rel, it, tot, hist, bnorm, verdict = run(bs, jnp.asarray(tol_arr))
         tols = tol_arr
+    verdict = np.asarray(verdict)
     out = []
     for i in range(bs.shape[0]):
         r = float(rel[i])
         out.append(SolveResult(np.asarray(x[i]), int(tot[i]), r, r <= float(tols[i]) * 1.01,
-                               _trim_history(hist[i], int(it[i]), float(bnorm[i]))))
+                               _trim_history(hist[i], int(it[i]), float(bnorm[i])),
+                               verdict=VERDICTS[int(verdict[i])]))
     return out
 
 
 def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
                   broadcast="psum", method="gmres", tol=1e-5, fact=None,
-                  bucket=True, ordering=None, precond_method=None, **kw):
+                  bucket=True, ordering=None, precond_method=None,
+                  on_breakdown="raise", pivot_tol=None, **kw):
     """Distributed end-to-end solve: sharded TOP-ILU factorize + solve.
 
     The factorization stays device-resident (``ilu_sharded``), the
@@ -585,7 +701,8 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
                 ap, ord_.permute_vector(np.asarray(b, np.float32)), k=k,
                 mesh=mesh, band_rows=band_rows, rule=rule, broadcast=broadcast,
                 method=method, tol=tol, fact=fact, bucket=bucket,
-                ordering="natural", precond_method=precond_method, **kw)
+                ordering="natural", precond_method=precond_method,
+                on_breakdown=on_breakdown, pivot_tol=pivot_tol, **kw)
             if not caller_fact and fact is not None and fact.ordering is None:
                 fact.ordering = ord_  # so `fact=` round-trips re-adopt it
             return _unpermute_results(res, ord_), fact
@@ -615,9 +732,13 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
         precond = fact.precond(broadcast=broadcast, method=precond_method)
     elif k is not None:
         f_key = ("sharded_fact", k, rule, band_rows, broadcast, mesh_key)
+        if on_breakdown != "raise" or pivot_tol is not None:
+            f_key = f_key + (on_breakdown, pivot_tol)
         if f_key not in cache:
             cache[f_key] = ilu_sharded(a, k, rule=rule, band_rows=band_rows,
-                                       mesh=mesh, broadcast=broadcast)
+                                       mesh=mesh, broadcast=broadcast,
+                                       on_breakdown=on_breakdown,
+                                       pivot_tol=pivot_tol)
         fact = cache[f_key]
         precond = fact.precond(broadcast=broadcast, method=precond_method)
     b = jnp.asarray(b, jnp.float32)
@@ -627,18 +748,20 @@ def solve_sharded(a, b, k=1, mesh=None, band_rows=32, rule="sum",
         nb = b.shape[0]
         if bucket:
             b = _pad_rhs_batch(b, bucket_batch(nb))
-        return gmres_batched(matvec, b, precond,
-                             tol=_pad_tols(tol, b.shape[0]), **kw)[:nb], fact
+        res = gmres_batched(matvec, b, precond,
+                            tol=_pad_tols(tol, b.shape[0]), **kw)[:nb]
+        return _annotate_reports(res, fact), fact
     if b.ndim != 1:
         raise ValueError(f"solve_sharded expects b of shape (n,) or (batch, n), got {b.shape}")
     fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]
     res = fn(matvec, b, precond, tol=tol, **kw)
-    return res, fact
+    return _annotate_reports(res, fact), fact
 
 
 def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
                broadcast="psum", method="gmres", tol=1e-5, sharded=True,
-               ordering=None, precond_method=None, **kw):
+               ordering=None, precond_method=None,
+               on_breakdown="raise", pivot_tol=None, **kw):
     """Serving warmup: pre-compile the whole factorize→precondition→solve
     stack for the given RHS batch-size buckets, so the first real request
     of a pre-warmed shape never pays the ~1–2 s first-dispatch XLA compile.
@@ -666,13 +789,17 @@ def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
                                        rule=rule, broadcast=broadcast,
                                        method=method, tol=tol, mesh=mesh,
                                        ordering=ordering,
-                                       precond_method=precond_method, **kw)
+                                       precond_method=precond_method,
+                                       on_breakdown=on_breakdown,
+                                       pivot_tol=pivot_tol, **kw)
             fact.precond(broadcast=broadcast, method=precond_method).warm((tgt,))
         else:
             _res, fact = solve_with_ilu(a, zb, k=k, band_rows=band_rows,
                                         method=method, tol=tol,
                                         ordering=ordering,
-                                        precond_method=precond_method, **kw)
+                                        precond_method=precond_method,
+                                        on_breakdown=on_breakdown,
+                                        pivot_tol=pivot_tol, **kw)
             fact.precond(method=precond_method).warm((tgt,))
         out[nb] = time.perf_counter() - t0
     return out
@@ -680,7 +807,8 @@ def warm_solve(a, k=1, batch_sizes=(1,), mesh=None, band_rows=32, rule="sum",
 
 def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
                    band_rows=32, use_pallas=True, ordering=None,
-                   precond_method=None, **kw):
+                   precond_method=None, on_breakdown="raise", pivot_tol=None,
+                   **kw):
     """End-to-end: factorize with ILU(k), then solve. Returns (SolveResult, fact).
 
     ``ordering=`` solves the symmetrically permuted system instead
@@ -714,7 +842,8 @@ def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
             res, fact = solve_with_ilu(
                 ap, ord_.permute_vector(np.asarray(b, np.float32)), k=k,
                 method=method, backend=backend, tol=tol, band_rows=band_rows,
-                use_pallas=use_pallas, precond_method=precond_method, **kw)
+                use_pallas=use_pallas, precond_method=precond_method,
+                on_breakdown=on_breakdown, pivot_tol=pivot_tol, **kw)
             if fact is not None and fact.ordering is None:
                 fact.ordering = ord_
             return _unpermute_results(res, ord_), fact
@@ -730,15 +859,19 @@ def solve_with_ilu(a, b, k=1, method="gmres", backend="jax", tol=1e-5,
     precond = None
     if k is not None:
         f_key = ("fact", k, backend, band_rows)
+        if on_breakdown != "raise" or pivot_tol is not None:
+            f_key = f_key + (on_breakdown, pivot_tol)
         if f_key not in cache:
-            cache[f_key] = ilu(a, k, backend=backend, band_rows=band_rows)
+            cache[f_key] = ilu(a, k, backend=backend, band_rows=band_rows,
+                               on_breakdown=on_breakdown, pivot_tol=pivot_tol)
         fact = cache[f_key]
         precond = fact.precond(use_pallas=use_pallas, method=precond_method)
     b = jnp.asarray(b, jnp.float32)
     if b.ndim == 2:
         if method != "gmres":
             raise ValueError("batched right-hand sides are supported for method='gmres' only")
-        return gmres_batched(matvec, b, precond, tol=tol, **kw), fact
+        res = gmres_batched(matvec, b, precond, tol=tol, **kw)
+        return _annotate_reports(res, fact), fact
     fn = {"gmres": gmres, "bicgstab": bicgstab, "cg": cg}[method]
     res = fn(matvec, b, precond, tol=tol, **kw)
-    return res, fact
+    return _annotate_reports(res, fact), fact

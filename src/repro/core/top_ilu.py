@@ -103,6 +103,11 @@ class ShardedILUFactorization:
     # "inverse" (the incomplete-inverse SpMV chain — two collectives per
     # apply, no epochs), or "auto" (cost-modeled per matrix)
     precond_method: str = "sweep"
+    # pivot-guard audit (core.guard.FactorHealth) — None when the guard was
+    # bypassed; ``health.shift`` > 0 means this factorization describes the
+    # diagonally shifted system, and ``health.degraded`` routes
+    # ``precond()`` to the identity fallback
+    health: Optional[object] = None
     # structure-keyed shared cache (the engine-store entry): the sharded
     # triangular plan + compiled sweep live here, so refactorizations of
     # the same structure rebind values to one compiled solve engine
@@ -164,6 +169,12 @@ class ShardedILUFactorization:
         inverse SpMV chain, two collectives per apply regardless of
         wavefront depth (``broadcast`` is moot — both exchanges are plain
         all_gathers). ``"auto"`` races the two cost models."""
+        if self.health is not None and self.health.degraded:
+            # shift-ladder exhaustion under on_breakdown="fallback":
+            # sweeping the broken factor would NaN every lane, so M^{-1}=I
+            from .guard import IdentityPrecondApply
+
+            return self._preconds.setdefault("identity", IdentityPrecondApply())
         method = self.resolve_method(method)
         if method == "inverse":
             if "inverse" not in self._preconds:

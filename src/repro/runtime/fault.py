@@ -30,6 +30,7 @@ class StragglerMonitor:
     ewma_alpha: float = 0.2
     _ewma: Optional[float] = None
     slow_steps: int = 0
+    steps: int = 0
 
     def observe(self, dt: float) -> bool:
         """Returns True if this step was a straggler."""
@@ -37,6 +38,7 @@ class StragglerMonitor:
         self._ewma = dt if self._ewma is None else (
             self.ewma_alpha * dt + (1 - self.ewma_alpha) * self._ewma
         )
+        self.steps += 1
         if slow:
             self.slow_steps += 1
         return slow

@@ -5,14 +5,18 @@ batched into any coalesced solve returns bits identical to solving it
 alone. See DESIGN.md §11 for the architecture walk-through.
 """
 from .admission import (
+    BREAKDOWN,
+    DEADLINE_EXCEEDED,
     AdmissionError,
     AdmissionQueue,
     SolveRequest,
     SolveResponse,
+    validate_deadline,
     validate_request,
 )
-from .cache import CacheEntry, PlanCache
+from .cache import CacheEntry, PlanCache, identity_values
 from .coalescer import CoalescedBatch, coalesce
+from .dispatcher import Dispatcher
 from .engine import EngineBinding, LaneResult, ServeEngine, ShardedServeEngine
 from .metrics import CompileWatch, LatencyHistogram, ServiceMetrics, compile_count
 from .service import ServeConfig, SolveService
@@ -21,9 +25,12 @@ from .traffic import TrafficRecord, TrafficResult, run_traffic
 __all__ = [
     "AdmissionError",
     "AdmissionQueue",
+    "BREAKDOWN",
     "CacheEntry",
     "CoalescedBatch",
     "CompileWatch",
+    "DEADLINE_EXCEEDED",
+    "Dispatcher",
     "EngineBinding",
     "LaneResult",
     "LatencyHistogram",
@@ -39,6 +46,8 @@ __all__ = [
     "TrafficResult",
     "coalesce",
     "compile_count",
+    "identity_values",
     "run_traffic",
+    "validate_deadline",
     "validate_request",
 ]

@@ -31,8 +31,14 @@ UNKNOWN_MATRIX = "unknown_matrix"
 BAD_SHAPE = "bad_shape"
 NON_FINITE = "non_finite"
 BAD_TOL = "bad_tol"
+BAD_DEADLINE = "bad_deadline"
 QUEUE_FULL = "queue_full"
 SOLVE_FAILED = "solve_failed"
+#: the request's deadline elapsed before (or while) its batch solved
+DEADLINE_EXCEEDED = "deadline_exceeded"
+#: the lane's solve classified as breakdown/diverged and the shift retry
+#: (if enabled) did not recover it
+BREAKDOWN = "breakdown"
 
 
 class AdmissionError(ValueError):
@@ -60,6 +66,27 @@ class SolveRequest:
     # bound at admission: the cache-entry binding this request will solve
     # against (a racing value update must not retarget an in-flight solve)
     binding: object = None
+    #: wall-clock budget (None = no deadline); checked before dispatch and
+    #: again before the response is recorded — an expired request fails with
+    #: DEADLINE_EXCEEDED instead of occupying a lane
+    deadline_seconds: Optional[float] = None
+    expires_at: float = float("inf")
+    # async completion: the dispatcher sets `response` then fires `done`;
+    # synchronous tick() callers read the returned responses instead
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+    response: object = dataclasses.field(default=None, repr=False, compare=False)
+
+    def finish(self, resp) -> None:
+        self.response = resp
+        self.done.set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until this request's response exists (async dispatcher
+        path). Returns None on timeout."""
+        if self.done.wait(timeout):
+            return self.response
+        return None
 
 
 @dataclasses.dataclass
@@ -81,6 +108,29 @@ class SolveResponse:
     batch_lanes: int = 0
     #: cache-entry version the solve ran against (refactorization audit trail)
     matrix_version: int = -1
+    #: solver termination verdict for this lane (solvers.VERDICTS), None
+    #: when the request never reached a solve
+    verdict: Optional[str] = None
+    #: True when the response came from a degraded path: a shift-retry
+    #: recovery or an identity-preconditioner fallback
+    degraded: bool = False
+    #: diagonal shift α of the preconditioner that produced this response
+    shift: float = 0.0
+
+
+def validate_deadline(deadline_seconds) -> Optional[float]:
+    """Validate a per-request deadline; returns the float budget or None."""
+    if deadline_seconds is None:
+        return None
+    try:
+        d = float(deadline_seconds)
+    except (TypeError, ValueError):
+        raise AdmissionError(
+            BAD_DEADLINE, f"deadline {deadline_seconds!r} is not a float") from None
+    if not (np.isfinite(d) and d > 0):
+        raise AdmissionError(
+            BAD_DEADLINE, f"deadline must be a finite positive float, got {d}")
+    return d
 
 
 def validate_request(tenant: str, matrix_id: str, b, tol, n: Optional[int]) -> np.ndarray:

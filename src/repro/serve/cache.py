@@ -38,8 +38,20 @@ import numpy as np
 
 from repro.core.sparse import CSRMatrix
 
-from .admission import QUEUE_FULL, UNKNOWN_MATRIX, AdmissionError
+from .admission import BREAKDOWN, QUEUE_FULL, UNKNOWN_MATRIX, AdmissionError
 from .engine import ServeEngine
+
+
+def identity_values(pattern) -> np.ndarray:
+    """Pattern-aligned factor values of the identity (diag 1, rest 0).
+
+    Swept through the already-compiled triangular executable these apply
+    M^{-1} = I exactly — every L lane contributes ``barred(0·y) = 0`` and
+    every U diagonal divides by 1.0 — so the serve layer's last-resort
+    degradation costs a bind, never a new executable."""
+    vals = np.zeros(pattern.nnz, np.float32)
+    vals[np.asarray(pattern.indptr[:-1]) + np.asarray(pattern.diag_ptr)] = 1.0
+    return vals
 
 
 class CacheEntry:
@@ -57,6 +69,10 @@ class CacheEntry:
         self.plan_host = plan_host if plan_host is not None else a0
         self.pins = 0
         self.version = binding.version
+        # lazily built shifted-preconditioner bindings for breakdown
+        # retries, keyed by ("shift", base binding version) — one ladder
+        # climb per value version, shared by every retrying request
+        self.degraded_bindings: dict = {}
 
 
 class PlanCache:
@@ -64,11 +80,19 @@ class PlanCache:
     submits, and background refactor threads may interleave freely."""
 
     def __init__(self, capacity: int = 8, metrics=None,
-                 engine_factory: Optional[Callable] = None):
+                 engine_factory: Optional[Callable] = None,
+                 on_breakdown: str = "shift", pivot_tol: Optional[float] = None):
         if capacity < 1:
             raise ValueError(f"PlanCache capacity must be >= 1, got {capacity}")
+        if on_breakdown not in ("raise", "shift", "fallback", "ignore"):
+            raise ValueError(f"PlanCache: unknown on_breakdown {on_breakdown!r}")
         self.capacity = capacity
         self.metrics = metrics
+        # pivot-guard policy for every factorization this cache performs
+        # (serve default "shift": a tenant's broken matrix registers with a
+        # shifted preconditioner instead of poisoning its future batches)
+        self.on_breakdown = on_breakdown
+        self.pivot_tol = pivot_tol
         self._engine_factory = engine_factory or self._default_engine_factory
         self._lock = threading.RLock()
         self._entries: "collections.OrderedDict[str, CacheEntry]" = collections.OrderedDict()
@@ -119,11 +143,47 @@ class PlanCache:
         with self._lock:
             self._evict_for_insert(exclude=matrix_id)
             engine = self._shared_engine(a, pattern, vals_csr, engine_knobs)
-            binding = engine.bind(a, vals_csr)
+            binding = self._guarded_bind(engine, host, pattern, a, vals_csr)
             entry = CacheEntry(matrix_id, a, pattern, engine, binding, plan_host=host)
             self._entries[matrix_id] = entry
             self._entries.move_to_end(matrix_id)
             return entry
+
+    def _guarded_bind(self, engine, host, pattern, a, vals_csr):
+        """Audit the fresh factor values and bind per ``on_breakdown``:
+        healthy values bind as-is (the audit is a pure read — the binding
+        is bitwise what an unguarded bind produces); broken ones climb the
+        shift ladder through the same compiled engines, and exhaustion
+        either binds the exact identity preconditioner (``"fallback"``,
+        single-device) or rejects the matrix with a structured BREAKDOWN."""
+        from repro.core.guard import audit_values, ladder_alphas
+
+        if self.on_breakdown == "ignore":
+            return engine.bind(a, vals_csr)
+        health = audit_values(pattern, vals_csr, self.pivot_tol)
+        if health.ok:
+            return engine.bind(a, vals_csr)
+        if self.metrics is not None:
+            self.metrics.record_robustness("broken_factorizations")
+        if self.on_breakdown == "raise":
+            raise AdmissionError(BREAKDOWN, health.summary())
+        def factorize(m):
+            return self._factorize(host, pattern, m)
+        for alpha in ladder_alphas():
+            b2 = engine.bind_degraded(a, alpha, factorize)
+            if b2 is not None:
+                if self.metrics is not None:
+                    self.metrics.record_robustness("shifted_bindings")
+                return b2
+        if self.on_breakdown == "fallback" and getattr(
+                engine, "supports_identity_fallback", False):
+            b2 = engine.bind(a, identity_values(pattern))
+            b2.degraded = True
+            if self.metrics is not None:
+                self.metrics.record_robustness("identity_fallbacks")
+            return b2
+        raise AdmissionError(
+            BREAKDOWN, f"shift ladder exhausted: {health.summary()}")
 
     def _shared_engine(self, a, pattern, vals_csr, knobs):
         probe = self._engine_factory(a, pattern, vals_csr, **knobs)
@@ -208,7 +268,15 @@ class PlanCache:
         def work():
             a_new = CSRMatrix(n=a0.n, indptr=a0.indptr, indices=a0.indices, data=data)
             vals_csr = self._factorize(host, pattern, a_new)
-            binding = engine.bind(a_new, vals_csr)
+            try:
+                binding = self._guarded_bind(engine, host, pattern, a_new, vals_csr)
+            except AdmissionError:
+                # a value push that breaks down unrecoverably keeps the old
+                # binding serving — existing requests stay healthy; the
+                # counter records the rejected update
+                if self.metrics is not None:
+                    self.metrics.record_robustness("rejected_updates")
+                return
             with self._lock:
                 cur = self._entries.get(matrix_id)
                 if cur is not None and cur.engine is engine:
@@ -224,6 +292,43 @@ class PlanCache:
         if not background:
             t.join()
         return t
+
+    def degraded_binding(self, matrix_id: str, binding) -> Optional["object"]:
+        """A shifted-preconditioner binding for retrying breakdown lanes.
+
+        Climbs the α ladder against the *exact matrix of the base binding*
+        (``binding.a`` — not the entry's possibly newer values: the retry
+        must solve the system the request was admitted under), audits each
+        rung, and caches the first healthy binding per base version so one
+        ladder climb serves every retrying request of that version. The
+        retried solve's matvec still targets the original A — only the
+        preconditioner is shifted. Returns None when the ladder exhausts
+        (the caller fails the lane with a structured BREAKDOWN)."""
+        from repro.core.guard import ladder_alphas
+
+        with self._lock:
+            e = self._entries.get(matrix_id)
+            if e is None or binding.a is None:
+                return None
+            key = ("shift", binding.version)
+            cached = e.degraded_bindings.get(key)
+            if cached is not None:
+                return cached
+            engine, pattern, host = e.engine, e.pattern, e.plan_host
+        def factorize(m):
+            return self._factorize(host, pattern, m)
+        for alpha in ladder_alphas():
+            try:
+                b2 = engine.bind_degraded(binding.a, alpha, factorize)
+            except Exception:
+                return None
+            if b2 is not None:
+                with self._lock:
+                    cur = self._entries.get(matrix_id)
+                    if cur is not None:
+                        cur.degraded_bindings[key] = b2
+                return b2
+        return None
 
     def wait_refactors(self, timeout: Optional[float] = None) -> None:
         """Join all outstanding refactor workers (tests / drain)."""

@@ -57,6 +57,9 @@ class LaneResult:
     iterations: int
     residual: float
     converged: bool
+    #: solver termination verdict (repro.core.solvers.VERDICTS) — the
+    #: service's retry/quarantine policy keys on this
+    verdict: str = ""
 
 
 @dataclasses.dataclass
@@ -71,6 +74,16 @@ class EngineBinding:
     value_args: tuple
     vals_csr: np.ndarray
     bound_seconds: float
+    #: the CSRMatrix this binding's *matvec* values came from — the
+    #: shift-retry path refactors `A + α·diag(‖row‖₁)` from it while the
+    #: solve keeps targeting this exact A (Manteuffel: shift the
+    #: preconditioner, never the system)
+    a: object = None
+    #: diagonal shift α of the preconditioner factor (0 = unshifted)
+    shift: float = 0.0
+    #: True when this binding preconditions with the exact identity (the
+    #: shift ladder exhausted under the cache's "fallback" policy)
+    degraded: bool = False
 
 
 def engine_fingerprint(a: CSRMatrix, pattern: ILUPattern, knobs: tuple) -> tuple:
@@ -96,6 +109,10 @@ class ServeEngine:
     ``use_pallas``); ``bind`` attaches a value version, ``solve`` runs a
     coalesced bucket, ``warm`` AOT-compiles the bucket set.
     """
+
+    #: binding identity-valued factors through the compiled sweep applies
+    #: M^{-1} = I exactly — the cache's last-resort "fallback" degradation
+    supports_identity_fallback = True
 
     def __init__(self, a: CSRMatrix, pattern: ILUPattern, vals_csr: np.ndarray,
                  restart: int = DEFAULT_RESTART, maxiter: int = DEFAULT_MAXITER,
@@ -236,7 +253,26 @@ class ServeEngine:
         self._versions += 1
         return EngineBinding(version=self._versions, value_args=vargs,
                              vals_csr=np.asarray(vals_csr, np.float32),
-                             bound_seconds=time.perf_counter() - t0)
+                             bound_seconds=time.perf_counter() - t0, a=a)
+
+    def bind_degraded(self, a: CSRMatrix, shift: float, factorize) -> Optional[EngineBinding]:
+        """One rung of the serve-side shift ladder: factor
+        ``A + shift·diag(‖row‖₁)`` through ``factorize`` (the cache's
+        already-compiled plan — same structure, zero compiles), audit it,
+        and bind the shifted *sweep* values against the **original** A's
+        matvec values. The solve still targets Ax=b; only M changes — and
+        the bucketed executable is the very one the healthy path uses, so a
+        retry costs a bind, never a compile. Returns None when this rung's
+        factor is itself broken (the caller escalates α)."""
+        from repro.core.guard import audit_values, shifted_matrix
+
+        a_s = shifted_matrix(a, shift)
+        vals_s = factorize(a_s)
+        if not audit_values(self.pattern, vals_s).ok:
+            return None
+        binding = self.bind(a, vals_s)
+        binding.shift = float(shift)
+        return binding
 
     # -- solving ------------------------------------------------------------
     def bucket_for(self, nb: int) -> int:
@@ -265,14 +301,18 @@ class ServeEngine:
             tols = np.concatenate([tols, np.ones(tgt - nb, np.float32)])
         ex = self._aot.get(tgt)
         fn = ex if ex is not None else self._jit
-        x, rel, it, tot, hist, bnorm = fn(
+        x, rel, it, tot, hist, bnorm, verdict = fn(
             binding.value_args, jnp.asarray(bs), jnp.asarray(tols))
+        from repro.core.solvers import VERDICTS
+
         x = np.asarray(x)
         rel = np.asarray(rel)
         tot = np.asarray(tot)
+        verdict = np.asarray(verdict)
         return [
             LaneResult(x=x[i], iterations=int(tot[i]), residual=float(rel[i]),
-                       converged=float(rel[i]) <= float(tols[i]) * 1.01)
+                       converged=float(rel[i]) <= float(tols[i]) * 1.01,
+                       verdict=VERDICTS[int(verdict[i])])
             for i in range(nb)
         ]
 
@@ -310,6 +350,10 @@ class ShardedServeEngine:
     structure-keyed ``_shared`` store.
     """
 
+    #: the sharded engine factors internally — it cannot bind caller-
+    #: provided identity values, so ladder exhaustion rejects instead
+    supports_identity_fallback = False
+
     def __init__(self, a: CSRMatrix, pattern: ILUPattern, vals_csr=None,
                  restart: int = DEFAULT_RESTART, maxiter: int = DEFAULT_MAXITER,
                  precond_method: str = "sweep", mesh=None, band_rows: int = 32,
@@ -345,22 +389,58 @@ class ShardedServeEngine:
 
         t0 = time.perf_counter()
         fact = ilu_sharded(a, self.k, rule=self.rule, band_rows=self.band_rows,
-                           mesh=self.mesh, precond_method=self.precond_method)
+                           mesh=self.mesh, precond_method=self.precond_method,
+                           on_breakdown="ignore")
         if self._prev_fact is not None:
             # same structure ⇒ the sharded triangular plan + compiled sweep
             # in `_shared` rebind to the new values without recompiling
             fact._shared = self._prev_fact._shared
         for nb in self.buckets:
+            # warm the exact serving-path engine: per-lane tol ARRAY +
+            # bucket=False (what solve() dispatches) — a scalar tol would
+            # warm a different jit and leave serving to pay the compile
             zb = np.zeros((nb, self.n), np.float32)
-            solve_sharded(a, zb, fact=fact, tol=1.0, restart=self.restart,
+            solve_sharded(a, zb, fact=fact, tol=np.ones(nb, np.float32),
+                          bucket=False, restart=self.restart,
                           maxiter=self.maxiter, precond_method=self.precond_method)
         self._prev_fact = fact
         self._versions += 1
         binding = EngineBinding(
             version=self._versions, value_args=(a, fact),
             vals_csr=np.asarray(fact.values_csr(), np.float32),
-            bound_seconds=time.perf_counter() - t0)
+            bound_seconds=time.perf_counter() - t0, a=a)
         return binding
+
+    def bind_degraded(self, a: CSRMatrix, shift: float, factorize=None) -> Optional[EngineBinding]:
+        """Shift-retry rung, sharded: refactor ``A + shift·diag(‖row‖₁)`` on
+        the mesh (the shifted matrix adopts A's engine stores, so the
+        factorization re-executes without re-planning), audit on device, and
+        bind ``(original A, shifted fact)`` — the sharded matvec stays on A
+        while the sweep reads the shifted factor. ``factorize`` is unused
+        (the mesh path factors itself); the fresh closure-keyed Krylov jits
+        pre-warm here, off the healthy serving path."""
+        from repro.core.api import ilu_sharded
+        from repro.core.guard import shifted_matrix
+        from repro.core.solvers import solve_sharded
+
+        a_s = shifted_matrix(a, shift)
+        fact = ilu_sharded(a_s, self.k, rule=self.rule, band_rows=self.band_rows,
+                           mesh=self.mesh, precond_method=self.precond_method,
+                           on_breakdown="ignore")
+        if self._prev_fact is not None:
+            fact._shared = self._prev_fact._shared
+        if not fact.health.ok:
+            return None
+        for nb in self.buckets:
+            zb = np.zeros((nb, self.n), np.float32)
+            solve_sharded(a, zb, fact=fact, tol=np.ones(nb, np.float32),
+                          bucket=False, restart=self.restart,
+                          maxiter=self.maxiter, precond_method=self.precond_method)
+        self._versions += 1
+        return EngineBinding(
+            version=self._versions, value_args=(a, fact),
+            vals_csr=np.asarray(fact.values_csr(), np.float32),
+            bound_seconds=0.0, a=a, shift=float(shift))
 
     def bucket_for(self, nb: int) -> int:
         from repro.core.solvers import bucket_batch
@@ -384,7 +464,7 @@ class ShardedServeEngine:
                                precond_method=self.precond_method)
         return [
             LaneResult(x=r.x, iterations=r.iterations, residual=r.residual,
-                       converged=r.converged)
+                       converged=r.converged, verdict=r.verdict)
             for r in res[:nb]
         ]
 

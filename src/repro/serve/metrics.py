@@ -174,6 +174,17 @@ class ServiceMetrics:
         self.solve_seconds_total = 0.0
         self.compile_watch = CompileWatch()
         self.warmup_compiles = 0
+        # robustness counters (breakdown/retry/degradation accounting);
+        # defaultdict so new counter names need no schema change here —
+        # bench_schema.py pins the set that BENCH_serve.json commits
+        self.robustness: Dict[str, int] = collections.defaultdict(int)
+        # tick-duration health: EWMA-based slow-tick detector (the
+        # StragglerMonitor from runtime/fault — previously only used by
+        # run_with_restarts) + an exact-percentile histogram
+        from repro.runtime.fault import StragglerMonitor
+
+        self.tick_monitor = StragglerMonitor(deadline_factor=3.0)
+        self.tick_hist = LatencyHistogram(reservoir=10_000)
 
     # -- recording hooks (called by the service/cache/coalescer) ----------
     def record_admission(self, ok: bool, reason: Optional[str] = None) -> None:
@@ -219,9 +230,22 @@ class ServiceMetrics:
             else:
                 raise ValueError(f"unknown cache event {event!r}")
 
-    def record_tick(self) -> None:
+    def record_tick(self, seconds: Optional[float] = None) -> None:
+        """Count a tick; with ``seconds`` also feed the slow-tick monitor
+        (EWMA straggler detection) and the tick-duration histogram."""
         with self._lock:
             self.ticks += 1
+            if seconds is not None:
+                self.tick_monitor.observe(seconds)
+                self.tick_hist.observe(seconds)
+
+    def record_robustness(self, name: str, n: int = 1) -> None:
+        """Bump a named robustness counter (breakdown_lanes, shift_retries,
+        retry_recoveries, degraded_responses, deadline_expired,
+        quarantined_batches, broken_factorizations, shifted_bindings,
+        identity_fallbacks, rejected_updates, ...)."""
+        with self._lock:
+            self.robustness[name] += n
 
     def mark_warm(self) -> None:
         """End of warmup: pin the compile baseline. ``compiles_after_warmup``
@@ -274,6 +298,15 @@ class ServiceMetrics:
                     "total": compile_count(),
                     "warmup": self.warmup_compiles,
                     "after_warmup": self.compile_watch.since_mark(),
+                },
+                "robustness": dict(self.robustness),
+                "tick_health": {
+                    "observed": self.tick_monitor.steps,
+                    "slow_ticks": self.tick_monitor.slow_steps,
+                    "deadline_factor": self.tick_monitor.deadline_factor,
+                    "mean_seconds": (self.tick_hist.sum_seconds / self.tick_hist.total)
+                    if self.tick_hist.total else 0.0,
+                    "p99_seconds": self.tick_hist.quantile(0.99),
                 },
                 "tenants": {t: h.to_dict() for t, h in sorted(self.tenant_latency.items())},
             }

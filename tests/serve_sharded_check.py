@@ -1,0 +1,80 @@
+"""Subprocess body for the scaled-down *sharded* serve soak.
+
+Run as:  XLA_FLAGS=--xla_force_host_platform_device_count=<D> \
+         JAX_PLATFORMS=cpu python tests/serve_sharded_check.py <n> <n_requests>
+
+Exits 0 iff a SolveService over :class:`ShardedServeEngine` on this device
+count survives a seeded burst mix (buckets 1/2/4) with:
+
+* every admitted request completed ``ok`` with verdict ``converged``,
+* zero serving-path XLA compiles after warmup,
+* every response **bitwise-equal** to its solo ``solve_sharded`` on the
+  same mesh, and
+* the robustness/tick-health metrics sections present.
+
+Deliberately small (n≈256, ~60 requests): the point is the engine wiring
+and the bit-compat bar on 2/4 virtual devices, not throughput — the
+single-device soak (test_serve_soak.py) carries the volume.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    n, n_requests = int(sys.argv[1]), int(sys.argv[2])
+    import numpy as np
+    import jax
+
+    from repro.core.matgen import matgen
+    from repro.core.solvers import solve_sharded
+    from repro.serve import ServeConfig, SolveService, run_traffic
+
+    d = len(jax.devices())
+    assert d >= 2, f"expected multi-device, got {jax.devices()}"
+    band_rows = 32
+    a = matgen(n, density=min(0.02, 12.0 / n), seed=21)
+
+    svc = SolveService(ServeConfig(sharded=True, band_rows=band_rows,
+                                   buckets=(1, 2, 4), k=1, restart=8,
+                                   maxiter=20))
+    svc.register_matrix("m0", a)
+    svc.warmup()
+    assert svc.readyz()["ready"]
+
+    result = run_traffic(svc, ["m0"], n_requests, seed=33,
+                         tenants=("t0", "t1"), burst_max=4,
+                         tol_choices=(1e-4, 1e-5))
+    snap = svc.metrics_snapshot()   # BEFORE reference solves (they compile)
+
+    assert snap["requests"]["admitted"] == n_requests
+    assert snap["requests"]["completed"] == n_requests, snap["requests"]
+    assert snap["requests"]["failed"] == 0
+    assert snap["compiles"]["after_warmup"] == 0, (
+        f"sharded serving path re-entered XLA after warmup: {snap['compiles']}")
+    assert isinstance(snap["robustness"], dict)
+    assert snap["tick_health"]["observed"] == snap["ticks"] > 0
+
+    # bitwise fidelity vs the solo sharded solve (same mesh, same values);
+    # one fact shared across references so the engine caches hit
+    by_id = {r.request_id: r for r in result.responses}
+    fact = None
+    for rec in result.records:
+        resp = by_id[rec.request_id]
+        assert resp.ok and resp.verdict == "converged", (resp.error, resp.verdict)
+        ref, fact = solve_sharded(a, rec.b, k=1, band_rows=band_rows,
+                                  tol=rec.tol, restart=8, maxiter=20,
+                                  fact=fact)
+        assert np.array_equal(
+            np.asarray(resp.x, np.float32).view(np.int32),
+            np.asarray(ref.x, np.float32).view(np.int32)), (
+            f"request {rec.request_id}: sharded serve response != solo "
+            f"solve_sharded (bucket {resp.batch_lanes})")
+
+    print(f"OK: sharded serve soak n={n} requests={n_requests} devices={d} "
+          f"batches={snap['coalescing']['batches']} bitwise-equal")
+
+
+if __name__ == "__main__":
+    main()

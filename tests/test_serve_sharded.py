@@ -1,0 +1,26 @@
+"""Scaled-down sharded serve soak on 2/4 virtual devices.
+
+Each case subprocesses ``serve_sharded_check.py`` (device count locks at
+first JAX init): a SolveService over :class:`ShardedServeEngine`, seeded
+bursty traffic across buckets 1/2/4, asserting zero post-warmup compiles
+and every response bitwise-equal to its solo ``solve_sharded``.
+"""
+import os
+import sys
+
+import pytest
+
+from subproc import run_checked
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "serve_sharded_check.py")
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_sharded_serve_soak(devices):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    rc, out, err = run_checked(
+        [sys.executable, SCRIPT, "256", "60"], env=env, timeout=480)
+    assert rc == 0, f"stdout:\n{out}\nstderr:\n{err[-2000:]}"
+    assert "bitwise-equal" in out
